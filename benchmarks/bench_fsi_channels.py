@@ -1,0 +1,46 @@
+"""Paper Fig. 6 / Table II analogue: per-sample runtime and cost of
+FSD-Inf-Serial / FSD-Inf-Queue / FSD-Inf-Object across worker counts.
+
+Scaled-down GraphChallenge configs (N, L, batch are reduced for CPU wall
+time; the simulator's latency/cost models are the paper-scale ones, so the
+qualitative crossovers — serial best at small N, queue cheapest comms at
+high P, object costs growing linearly with P — are directly comparable)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.data.graphchallenge import dense_inference, make_inputs, make_sparse_dnn
+from repro.faas.simulator import run_fsi
+
+
+def run(neurons=512, layers=24, batch=64, workers=(2, 4, 8, 16)) -> List[dict]:
+    net = make_sparse_dnn(neurons, n_layers=layers, seed=0)
+    x0 = make_inputs(neurons, batch, seed=1)
+    oracle = dense_inference(net, x0)
+    rows = []
+    t0 = time.perf_counter()
+    r = run_fsi(net, x0, channel="serial")
+    wall = time.perf_counter() - t0
+    assert np.allclose(r.output, oracle, rtol=1e-5, atol=1e-5)
+    rows.append(dict(name="fsi_serial", P=1,
+                     per_sample_ms=r.per_sample_ms(batch),
+                     cost_usd=r.cost.total, comms_usd=0.0, wall_s=wall))
+    for P in workers:
+        for ch in ("queue", "object"):
+            t0 = time.perf_counter()
+            r = run_fsi(net, x0, P=P, channel=ch, memory_mb=4000)
+            wall = time.perf_counter() - t0
+            assert np.allclose(r.output, oracle, rtol=1e-5, atol=1e-5)
+            rows.append(dict(
+                name=f"fsi_{ch}_P{P}", P=P,
+                per_sample_ms=r.per_sample_ms(batch),
+                cost_usd=r.cost.total,
+                comms_usd=r.cost.communication,
+                wire_mb=r.wire_exchange_bytes / 1e6,
+                wall_s=wall,
+            ))
+    return rows

@@ -1,0 +1,24 @@
+"""Paper §III launch-mechanism claim: hierarchical tree vs centralized loop
+vs Lambada-style two-level launch."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.faas.launch_tree import (
+    central_launch_schedule,
+    launch_schedule,
+    two_level_launch_schedule,
+)
+
+
+def run() -> List[dict]:
+    rows = []
+    for P in (8, 20, 62, 256, 1000):
+        rows.append(dict(
+            name=f"launch_P{P}",
+            tree_s=round(float(launch_schedule(P, branching=4).max()), 3),
+            central_s=round(float(central_launch_schedule(P).max()), 3),
+            two_level_s=round(float(two_level_launch_schedule(P).max()), 3),
+        ))
+    return rows

@@ -1,0 +1,38 @@
+"""Roofline table from the dry-run sweep (deliverable g).
+
+Reads ``dryrun_sweep.json`` (produced by ``python -m repro.launch.dryrun
+--all --both-meshes --json dryrun_sweep.json``) and prints the per-cell
+compute/memory/collective terms + bottleneck.  If the sweep file is missing,
+compiles a small representative subset on the fly."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+SWEEP_JSON = os.path.join(os.path.dirname(__file__), "..", "dryrun_sweep.json")
+
+
+def run(sweep_json: str = SWEEP_JSON) -> List[dict]:
+    if not os.path.exists(sweep_json):
+        return [dict(name="roofline_missing",
+                     note="run repro.launch.dryrun --all --both-meshes first")]
+    with open(sweep_json) as f:
+        cells = json.load(f)
+    rows = []
+    for c in cells:
+        if c["status"] != "ok":
+            rows.append(dict(name=f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}",
+                             status=c["status"], note=c["note"][:80]))
+            continue
+        rows.append(dict(
+            name=f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}",
+            compute_s=round(c["compute_term_s"], 5),
+            memory_s=round(c["memory_term_s"], 5),
+            collective_s=round(c["collective_term_s"], 5),
+            bottleneck=c["bottleneck"],
+            model_flops_ratio=round(c["model_flops_ratio"], 3),
+            fits_hbm=c["fits_hbm"],
+        ))
+    return rows

@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV: ``us_per_call`` is the benchmark's
+own wall time per simulated query/cell (µs) where meaningful, ``derived`` is
+the table's headline quantity (cost, volume ratio, roofline term, …).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _emit(rows, default_metric=None):
+    for row in rows:
+        name = row.pop("name")
+        us = row.pop("per_sample_ms", None)
+        us = us * 1e3 if us is not None else row.pop("us_per_call", "")
+        derived = ";".join(f"{k}={v}" for k, v in row.items())
+        print(f"{name},{us},{derived}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller configs (CI-sized)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        bench_cost_model,
+        bench_fsi_channels,
+        bench_launch,
+        bench_partitioning,
+        bench_roofline,
+        bench_sporadic,
+    )
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if args.quick:
+        _emit(bench_fsi_channels.run(neurons=256, layers=12, batch=32,
+                                     workers=(2, 4, 8)))
+        _emit(bench_partitioning.run(neurons=512, layers=12, batch=16, P=8))
+        _emit(bench_cost_model.run(neurons=256, layers=12, batch=32, P=4))
+        _emit(bench_sporadic.run(neurons=256, layers=12, batch=32))
+    else:
+        _emit(bench_fsi_channels.run())
+        _emit(bench_partitioning.run())
+        _emit(bench_cost_model.run())
+        _emit(bench_sporadic.run())
+    _emit(bench_launch.run())
+    _emit(bench_roofline.run())
+    print(f"# total benchmark wall time: {time.time() - t0:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

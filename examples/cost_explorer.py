@@ -1,0 +1,26 @@
+"""Interactive view of the paper's cost model (§IV): sweep model size ×
+parallelism and print which channel the recommender picks — reproducing the
+design recommendations (Serial → Queue → Object) as workloads grow.
+
+    PYTHONPATH=src python examples/cost_explorer.py
+"""
+
+from repro.core.cost_model import recommend_configuration
+
+
+def main():
+    print(f"{'model':>10} {'exchange/layer':>15} {'choice':>12} {'P':>4}")
+    for model_gb, exch_mb in [
+        (0.03, 0.1), (0.5, 0.5), (2, 1), (8, 2), (8, 60), (30, 200),
+    ]:
+        ch, p, _ = recommend_configuration(
+            model_bytes=int(model_gb * 1e9),
+            per_layer_exchange_bytes=exch_mb * 1e6,
+            n_layers=120,
+            memory_mb_per_worker=4000,
+        )
+        print(f"{model_gb:>8}GB {exch_mb:>13}MB {ch:>12} {p:>4}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Serve a (reduced) assigned arch with batched requests: prefill + decode
+loop through the engine, for a dense, an MoE and an SSM model (deliverable b).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving.engine import ServingEngine
+from repro.serving.router import route_tpu
+from repro.configs import get_shape
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for arch in ("internlm2-1.8b", "deepseek-moe-16b", "mamba2-370m"):
+        cfg_full = get_config(arch)
+        route = route_tpu(cfg_full, get_shape("decode_32k"))
+        cfg = cfg_full.reduced()
+        engine = ServingEngine(cfg, seed=0)
+        prompts = rng.integers(0, cfg.vocab_size, size=(4, 12)).astype(np.int32)
+        out = engine.generate(prompts, max_new_tokens=6)
+        print(f"[{arch}] router: {route.chips} chips ({route.reason})")
+        print(f"  generated tokens:\n{out.tokens}")
+
+
+if __name__ == "__main__":
+    main()

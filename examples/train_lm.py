@@ -1,0 +1,51 @@
+"""Train a (reduced) assigned-architecture LM end-to-end on CPU, with
+checkpointing, a simulated crash, and a bit-identical resume — a few hundred
+steps by default (deliverable b: end-to-end train driver).
+
+    PYTHONPATH=src python examples/train_lm.py --arch llama3.2-1b --steps 200
+"""
+
+import argparse
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.configs import ShapeConfig, get_config
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    shape = ShapeConfig("ex", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    try:
+        crash_at = max(2, args.steps // 2)
+        t1 = Trainer(cfg, shape, TrainerConfig(
+            total_steps=args.steps, ckpt_every=crash_at // 2,
+            ckpt_dir=ckpt_dir, stop_after=crash_at))
+        h1 = t1.fit()
+        print(f"ran {len(h1['loss'])} steps, then 'crashed'; "
+              f"loss {h1['loss'][0]:.4f} → {h1['loss'][-1]:.4f}")
+
+        t2 = Trainer(cfg, shape, TrainerConfig(
+            total_steps=args.steps, ckpt_every=50, ckpt_dir=ckpt_dir))
+        h2 = t2.fit(resume=True)
+        print(f"resumed at step {h2['step'][0]}, finished {args.steps}: "
+              f"final loss {h2['loss'][-1]:.4f}")
+        assert h2["loss"][-1] < h1["loss"][0], "training did not learn"
+        print("loss decreased ✓  (deterministic restart verified in tests)")
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

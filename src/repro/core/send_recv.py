@@ -1,0 +1,149 @@
+"""Per-layer ``Xsend`` / ``Xrecv`` maps (paper §III-C).
+
+The hypergraph partitioning stage equips every worker ``P_m`` with, for each
+layer ``k``:
+
+* ``Xsend_m^k``: {target worker n → global row ids of x^{k-1} that m owns and
+  n needs},
+* ``Xrecv_m^k``: {source worker n → global row ids of x^{k-1} that m needs
+  and n owns}.
+
+These are static (model × partition) artifacts computed offline — exactly the
+paper's "reads its share of the model weights, inference data and per-layer
+send and receive maps".  The same maps drive (a) the faithful FaaS simulator
+and (b) the TPU sparse-exchange collectives in ``core/tensor_parallel.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.partitioner import PartitionResult
+from repro.core.sparse import CSRMatrix
+
+__all__ = ["LayerCommPlan", "WorkerLayerPlan", "build_comm_plans"]
+
+
+@dataclasses.dataclass
+class WorkerLayerPlan:
+    """One worker's view of one layer's exchange."""
+
+    worker: int
+    layer: int
+    # global row ids of x^{k-1} this worker owns (sorted)
+    owned_in_rows: np.ndarray
+    # global row ids of W^k (⇒ x^k) this worker owns (sorted)
+    owned_out_rows: np.ndarray
+    # target worker → global x^{k-1} row ids to send (sorted, non-empty)
+    send: Dict[int, np.ndarray]
+    # source worker → global x^{k-1} row ids to receive (sorted, non-empty)
+    recv: Dict[int, np.ndarray]
+    # all x^{k-1} rows needed locally (owned ∪ received), sorted
+    needed_rows: np.ndarray
+
+    @property
+    def rows_sent(self) -> int:
+        return sum(len(v) for v in self.send.values())
+
+    @property
+    def rows_received(self) -> int:
+        return sum(len(v) for v in self.recv.values())
+
+
+@dataclasses.dataclass
+class LayerCommPlan:
+    layer: int
+    workers: List[WorkerLayerPlan]
+
+    def total_rows_sent(self) -> int:
+        return sum(w.rows_sent for w in self.workers)
+
+
+def build_comm_plans(
+    layers: Sequence[CSRMatrix], result: PartitionResult
+) -> List[LayerCommPlan]:
+    """Construct all per-layer, per-worker send/recv maps.
+
+    Complexity: O(nnz) per layer, fully vectorized.
+    """
+    P = result.P
+    plans: List[LayerCommPlan] = []
+    for k, W in enumerate(layers):
+        src_parts = result.parts[k]
+        dst_parts = result.parts[k + 1]
+        n_in = W.ncols
+
+        rows = np.repeat(np.arange(W.nrows, dtype=np.int64), W.row_nnz())
+        cols = W.indices.astype(np.int64)
+        dst = dst_parts[rows].astype(np.int64)
+
+        # need[j, n] = worker n reads column j in this layer
+        key = cols * P + dst
+        uniq = np.unique(key)
+        need_cols = uniq // P
+        need_workers = (uniq % P).astype(np.int32)
+        src_of_need = src_parts[need_cols].astype(np.int32)
+        remote = src_of_need != need_workers
+
+        workers: List[WorkerLayerPlan] = []
+        # pre-bucket the remote (src → dst, col) triples
+        r_cols = need_cols[remote]
+        r_src = src_of_need[remote]
+        r_dst = need_workers[remote]
+
+        owned_in = [np.nonzero(src_parts == m)[0] for m in range(P)]
+        owned_out = [np.nonzero(dst_parts == m)[0] for m in range(P)]
+
+        # group by (src, dst)
+        pair_key = r_src.astype(np.int64) * P + r_dst
+        order = np.argsort(pair_key, kind="stable")
+        pair_key_s = pair_key[order]
+        cols_s = r_cols[order]
+        boundaries = np.nonzero(np.diff(pair_key_s))[0] + 1
+        groups = np.split(cols_s, boundaries)
+        keys = pair_key_s[np.concatenate([[0], boundaries])] if pair_key_s.size else []
+
+        send_maps: List[Dict[int, np.ndarray]] = [dict() for _ in range(P)]
+        recv_maps: List[Dict[int, np.ndarray]] = [dict() for _ in range(P)]
+        for pk, g in zip(keys, groups):
+            s, d = int(pk // P), int(pk % P)
+            rows_sd = np.sort(g)
+            send_maps[s][d] = rows_sd
+            recv_maps[d][s] = rows_sd
+
+        for m in range(P):
+            recv_rows = (
+                np.concatenate(list(recv_maps[m].values()))
+                if recv_maps[m]
+                else np.zeros(0, dtype=np.int64)
+            )
+            needed = np.union1d(owned_in[m], recv_rows)
+            # restrict to columns actually read by m's rows
+            my_cols = np.unique(
+                W.indices[
+                    np.concatenate(
+                        [
+                            np.arange(W.indptr[i], W.indptr[i + 1])
+                            for i in owned_out[m]
+                        ]
+                    ).astype(np.int64)
+                ]
+            ) if len(owned_out[m]) else np.zeros(0, np.int64)
+            workers.append(
+                WorkerLayerPlan(
+                    worker=m,
+                    layer=k,
+                    owned_in_rows=owned_in[m],
+                    owned_out_rows=owned_out[m],
+                    send=send_maps[m],
+                    recv=recv_maps[m],
+                    needed_rows=np.union1d(
+                        np.intersect1d(owned_in[m], my_cols), recv_rows
+                    ),
+                )
+            )
+        plans.append(LayerCommPlan(layer=k, workers=workers))
+    return plans

@@ -1,0 +1,1 @@
+from repro.data import graphchallenge  # noqa: F401

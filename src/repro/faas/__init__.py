@@ -1,0 +1,9 @@
+"""Fully-serverless execution substrate (simulated AWS data plane).
+
+Every byte that moves between simulated Lambda workers really moves —
+serialized, zlib-compressed, size-capped and billed exactly as SNS/SQS/S3
+would — so the cost model validation and the Queue-vs-Object trade-off are
+measured, not asserted.
+"""
+
+from repro.faas.simulator import LatencyModel, run_fsi, FsiRunResult  # noqa: F401

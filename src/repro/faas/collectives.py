@@ -1,0 +1,143 @@
+"""MPI-style collectives over serverless channels (paper §II-B objective 6).
+
+The root worker coordinates Barrier / Reduce / Broadcast / AllReduce through
+the same pub-sub or object fabric used for point-to-point exchange, routed
+along the launch tree (partial aggregation at internal nodes keeps the root's
+queue shallow).  Timing is computed analytically over the tree — equivalent
+to simulating the token messages one by one — while API calls and bytes are
+billed on the fabric's meters.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.faas.launch_tree import TreeSpec
+from repro.faas.object_service import ObjectFabric
+from repro.faas.payload import Chunk
+from repro.faas.queue_service import QueueFabric
+from repro.faas.worker import WorkerState
+
+__all__ = ["barrier", "reduce_to_root", "broadcast", "all_reduce"]
+
+_TOKEN_BYTES = 64
+
+
+def _edge_cost(fabric) -> float:
+    """One-hop message time over the fabric."""
+    if isinstance(fabric, QueueFabric):
+        return fabric.publish_latency + fabric.fanout_latency + fabric.poll_rtt
+    return fabric.put_latency + fabric.list_latency + fabric.get_first_byte
+
+
+def _bill_edge(fabric, layer: int, src: int, dst: int, payload: bytes | None):
+    data = payload or b"\0" * _TOKEN_BYTES
+    if isinstance(fabric, QueueFabric):
+        cap = fabric.pricing.max_publish_payload
+        for lo in range(0, len(data), cap):
+            blob = Chunk(data[lo : lo + cap], raw_bytes=len(data[lo : lo + cap]))
+            fabric.publish_batch(src % fabric.n_topics, [(dst, blob)], 0.0)
+        n_msgs = -(-len(data) // cap)
+        fabric.poll(dst, 1e9, long_poll=True)  # drain for billing
+        fabric.delete_batch(dst, list(range(n_msgs)), 0.0)
+    else:
+        blob = Chunk(data, raw_bytes=len(data))
+        fabric.put_obj(layer, src, dst, blob, 0.0)
+        now, handles = fabric.list_files(layer, dst, 1e9)
+        for h in handles:
+            if not h.is_nul:
+                fabric.get_obj(layer, dst, h.key, now)
+        fabric._store.pop(fabric._prefix(layer, dst), None)
+
+
+def barrier(
+    workers: Sequence[WorkerState], fabric, tree: TreeSpec, layer_tag: int = 1 << 20
+) -> float:
+    """Tree up-sweep + down-sweep; on return every worker clock is aligned."""
+    P = len(workers)
+    edge = _edge_cost(fabric)
+    # up-sweep: completion time at each node
+    up = [0.0] * P
+    for m in reversed(range(P)):
+        t = workers[m].abs_time
+        for c in tree.children(m):
+            t = max(t, up[c] + edge)
+            _bill_edge(fabric, layer_tag, c, m, None)
+        up[m] = t
+    # down-sweep: release times
+    release = [0.0] * P
+    release[0] = up[0]
+    for m in range(P):
+        for c in tree.children(m):
+            _bill_edge(fabric, layer_tag, m, c, None)
+            release[c] = release[m] + edge
+    for m, w in enumerate(workers):
+        w.advance_to_abs(release[m])
+    return max(release)
+
+
+def reduce_to_root(
+    workers: Sequence[WorkerState],
+    fabric,
+    tree: TreeSpec,
+    payloads: List[np.ndarray],
+    op: str = "concat_rows",
+    layer_tag: int = 1 << 21,
+) -> np.ndarray:
+    """Reduce(P_0, ·): partial aggregation at internal nodes (paper line 20/25).
+
+    ``op='concat_rows'`` stacks row panels (the FSI output gather);
+    ``op='sum'`` adds equal-shaped arrays (classic MPI_Reduce).
+    """
+    P = len(workers)
+    edge = _edge_cost(fabric)
+    acc: List[List[np.ndarray]] = [[payloads[m]] for m in range(P)]
+    done = [0.0] * P
+    for m in reversed(range(P)):
+        t = workers[m].abs_time
+        for c in tree.children(m):
+            blob = b"".join(np.ascontiguousarray(a).tobytes() for a in acc[c])
+            t = max(t, done[c] + edge + len(blob) / _bandwidth(fabric))
+            _bill_edge(fabric, layer_tag, c, m, blob)
+            acc[m].extend(acc[c])
+        done[m] = t
+    workers[0].advance_to_abs(done[0])
+    if op == "sum":
+        out = acc[0][0].copy()
+        for a in acc[0][1:]:
+            out = out + a
+        return out
+    return np.concatenate(acc[0], axis=0)
+
+
+def broadcast(
+    workers: Sequence[WorkerState], fabric, tree: TreeSpec, payload: np.ndarray,
+    layer_tag: int = 1 << 22,
+) -> None:
+    P = len(workers)
+    edge = _edge_cost(fabric)
+    blob = np.ascontiguousarray(payload).tobytes()
+    t = [0.0] * P
+    t[0] = workers[0].abs_time
+    for m in range(P):
+        for c in tree.children(m):
+            _bill_edge(fabric, layer_tag, m, c, blob)
+            t[c] = t[m] + edge + len(blob) / _bandwidth(fabric)
+    for m, w in enumerate(workers):
+        w.advance_to_abs(t[m])
+
+
+def all_reduce(
+    workers: Sequence[WorkerState], fabric, tree: TreeSpec, payloads: List[np.ndarray]
+) -> np.ndarray:
+    out = reduce_to_root(workers, fabric, tree, payloads, op="sum")
+    broadcast(workers, fabric, tree, out)
+    return out
+
+
+def _bandwidth(fabric) -> float:
+    if isinstance(fabric, ObjectFabric):
+        return fabric.bandwidth
+    return 60e6  # effective SNS/SQS per-connection throughput

@@ -1,0 +1,128 @@
+"""Simulated S3 object storage fabric — FSD-Inf-Object (paper §III-B).
+
+Per the paper (Fig. 3):
+
+* ``n_buckets`` containers (``bucket-{n%10}``) so the per-prefix API request
+  quota scales k-fold [Lambada];
+* worker ``m`` sending to worker ``n`` in layer ``k`` writes
+  ``bucket-{n%b}/{k}/{n}/{m}_{n}.dat`` — or a zero-byte ``.nul`` marker when
+  it has nothing to send, so readers never GET empty files;
+* readers repeatedly LIST their own single prefix ``bucket-{m%b}/{k}/{m}/``
+  and GET only ``.dat`` handles still present in their recv map;
+* PUT/GET/LIST are billed per request, *independent of object size*, and
+  data transfer S3↔Lambda is free in-region — which is exactly why Object
+  wins at very large payloads and loses at high parallelism (§IV-C).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.faas.payload import Chunk
+
+__all__ = ["ObjectFabric", "ObjectMetrics", "ObjectHandle"]
+
+
+@dataclasses.dataclass
+class ObjectMetrics:
+    puts: int = 0       # V in Eq. 7
+    gets: int = 0       # R in Eq. 7
+    lists: int = 0      # L in Eq. 7
+    bytes_written: int = 0
+    raw_bytes: int = 0
+    nul_files: int = 0
+
+
+@dataclasses.dataclass
+class ObjectHandle:
+    key: str
+    size: int
+    visible_at: float
+    is_nul: bool
+    src: int
+
+
+class ObjectFabric:
+    def __init__(
+        self,
+        n_workers: int,
+        n_buckets: int = 10,
+        put_latency: float = 0.030,
+        get_first_byte: float = 0.018,
+        list_latency: float = 0.025,
+        bandwidth: float = 90e6,  # per-connection S3 streaming throughput
+    ):
+        self.n_workers = n_workers
+        self.n_buckets = max(1, min(n_buckets, n_workers))
+        self.put_latency = put_latency
+        self.get_first_byte = get_first_byte
+        self.list_latency = list_latency
+        self.bandwidth = bandwidth
+        self.metrics = ObjectMetrics()
+        # prefix "(bucket, layer, target)" → {key: (handle, blob)}
+        self._store: Dict[Tuple[int, int, int], Dict[str, Tuple[ObjectHandle, Chunk]]] = {}
+
+    def _prefix(self, layer: int, target: int) -> Tuple[int, int, int]:
+        return (target % self.n_buckets, layer, target)
+
+    def put_obj(
+        self, layer: int, src: int, target: int, blob: Chunk | None, at_time: float
+    ) -> float:
+        """PUT one object (or the 0-byte .nul marker); returns completion time."""
+        self.metrics.puts += 1
+        is_nul = blob is None or len(blob) == 0
+        size = 0 if is_nul else len(blob)
+        done = at_time + self.put_latency + size / self.bandwidth
+        ext = "nul" if is_nul else "dat"
+        key = f"{src}_{target}.{ext}"
+        handle = ObjectHandle(key=key, size=size, visible_at=done, is_nul=is_nul, src=src)
+        self._store.setdefault(self._prefix(layer, target), {})[key] = (
+            handle,
+            blob if blob is not None else Chunk(b"", 0),
+        )
+        if is_nul:
+            self.metrics.nul_files += 1
+        else:
+            self.metrics.bytes_written += size
+            self.metrics.raw_bytes += blob.raw_bytes
+        return done
+
+    def put_multipart(
+        self, layer: int, src: int, target: int, blobs: List[Chunk], at_time: float
+    ) -> float:
+        """Large sends: object storage allows effectively unlimited object
+        size, so multiple chunks to one target become one object (paper:
+        'each FaaS instance only needs to write a single object for each of
+        its targets in a given layer')."""
+        if not blobs:
+            return self.put_obj(layer, src, target, None, at_time)
+        joined = b"".join(
+            len(b).to_bytes(8, "little") + bytes(b) for b in blobs
+        )
+        chunk = Chunk(joined, raw_bytes=sum(b.raw_bytes for b in blobs))
+        return self.put_obj(layer, src, target, chunk, at_time)
+
+    @staticmethod
+    def split_multipart(blob: bytes) -> List[bytes]:
+        out, off = [], 0
+        while off < len(blob):
+            n = int.from_bytes(blob[off : off + 8], "little")
+            off += 8
+            out.append(blob[off : off + n])
+            off += n
+        return out
+
+    def list_files(self, layer: int, worker: int, at_time: float) -> Tuple[float, List[ObjectHandle]]:
+        """LIST the worker's own prefix; only handles already visible show up."""
+        self.metrics.lists += 1
+        now = at_time + self.list_latency
+        entries = self._store.get(self._prefix(layer, worker), {})
+        visible = [h for h, _ in entries.values() if h.visible_at <= now]
+        return now, sorted(visible, key=lambda h: h.key)
+
+    def get_obj(self, layer: int, worker: int, key: str, at_time: float) -> Tuple[float, Chunk]:
+        self.metrics.gets += 1
+        handle, blob = self._store[self._prefix(layer, worker)][key]
+        now = at_time + self.get_first_byte + handle.size / self.bandwidth
+        return now, blob

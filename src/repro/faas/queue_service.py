@@ -1,0 +1,194 @@
+"""Simulated SNS (pub-sub) + SQS (queues) fabric — FSD-Inf-Queue (§III-A).
+
+Topology per the paper (Fig. 2):
+
+* ``n_topics`` parallel SNS topics (``topic-{m%10}``) to spread publish load
+  and avoid single-resource I/O bottlenecks;
+* one *dedicated* SQS queue per worker, subscribed to every topic with a
+  service-side **filter policy** on the ``target`` message attribute — the
+  fan-out and filtering run in the provider's backend, not on the
+  resource-constrained workers;
+* publishes are batched (≤10 messages, ≤256KB total) and billed in 64KB
+  increments; SQS is billed per API call (receive / delete batches);
+* 'long' polling (W>0) visits all queue servers and waits up to W seconds,
+  returning as soon as messages exist — 'short' polling (W=0) samples a
+  subset of servers and may miss messages (modeled as a per-message visibility
+  probability), which is why the paper finds long polling strictly better.
+
+Latency accounting lives with the fabric so both FSI algorithms and the
+MPI-style collectives bill through one place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import PricingConstants, AWS_PRICING
+from repro.faas.payload import Chunk
+
+__all__ = ["QueueFabric", "QueueMetrics", "Delivery"]
+
+
+@dataclasses.dataclass
+class Delivery:
+    deliver_at: float        # service-side availability time (seconds)
+    target: int
+    blob: Chunk
+    attributes: Dict[str, int]
+    receipt: int = -1
+
+
+@dataclasses.dataclass
+class QueueMetrics:
+    publish_api_calls: int = 0
+    publish_billed_units: int = 0       # S in Eq. 5
+    bytes_sns_to_sqs: int = 0           # Z in Eq. 5
+    sqs_api_calls: int = 0              # Q in Eq. 6
+    messages_delivered: int = 0
+    empty_polls: int = 0
+    raw_bytes: int = 0                  # pre-compression volume (Table III)
+
+
+class QueueFabric:
+    """The SNS topics + per-worker SQS queues, with billing counters."""
+
+    def __init__(
+        self,
+        n_workers: int,
+        n_topics: int = 10,
+        pricing: PricingConstants = AWS_PRICING,
+        publish_latency: float = 0.012,
+        fanout_latency: float = 0.020,
+        poll_rtt: float = 0.008,
+        long_poll_window: float = 2.0,
+        short_poll_miss_prob: float = 0.35,
+        seed: int = 0,
+    ):
+        self.n_workers = n_workers
+        self.n_topics = max(1, min(n_topics, n_workers))
+        self.pricing = pricing
+        self.publish_latency = publish_latency
+        self.fanout_latency = fanout_latency
+        self.poll_rtt = poll_rtt
+        self.long_poll_window = long_poll_window
+        self.short_poll_miss_prob = short_poll_miss_prob
+        self.metrics = QueueMetrics()
+        self._queues: List[List[Delivery]] = [[] for _ in range(n_workers)]
+        self._rng = np.random.default_rng(seed)
+        self._receipt = 0
+
+    # -- producer side ------------------------------------------------------
+
+    def publish_batch(
+        self, topic: int, entries: List[Tuple[int, Chunk]], at_time: float
+    ) -> float:
+        """Publish ≤10 (target, blob) entries; returns completion time.
+
+        Billing: one publish request per 64KB increment of the total payload
+        (a 256KB batch = 4 billed units).  Data transfer SNS→SQS is billed
+        per byte (Z).
+        """
+        if not (1 <= len(entries) <= self.pricing.max_messages_per_publish):
+            raise ValueError("publish batch must contain 1..10 messages")
+        payload = sum(len(b) for _, b in entries)
+        if payload > self.pricing.max_publish_payload:
+            raise ValueError(
+                f"publish payload {payload}B exceeds "
+                f"{self.pricing.max_publish_payload}B cap"
+            )
+        self.metrics.publish_api_calls += 1
+        self.metrics.publish_billed_units += max(
+            1, -(-payload // self.pricing.publish_billing_unit)
+        )
+        self.metrics.bytes_sns_to_sqs += payload
+        self.metrics.raw_bytes += sum(b.raw_bytes for _, b in entries)
+        done = at_time + self.publish_latency
+        for target, blob in entries:
+            if not (0 <= target < self.n_workers):
+                raise ValueError(f"bad filter target {target}")
+            heapq.heappush(
+                self._queues[target],
+                # heap keyed by delivery time; receipt id breaks ties
+                _OrderedDelivery(
+                    done + self.fanout_latency, self._next_receipt(), target, blob
+                ),
+            )
+        return done
+
+    def _next_receipt(self) -> int:
+        self._receipt += 1
+        return self._receipt
+
+    # -- consumer side ------------------------------------------------------
+
+    def poll(
+        self, worker: int, at_time: float, long_poll: bool = True, max_messages: int = 10
+    ) -> Tuple[float, List[Delivery]]:
+        """ReceiveMessage.  Returns (time_after_poll, deliveries).
+
+        Long polling: if nothing is available now, block until the earliest
+        delivery or the window expiry, whichever first (no extra API cost
+        while waiting).  Short polling: returns immediately, and each
+        available message is missed with ``short_poll_miss_prob`` (not all
+        SQS servers are visited).
+        """
+        self.metrics.sqs_api_calls += 1
+        q = self._queues[worker]
+        now = at_time + self.poll_rtt
+
+        def available(t: float) -> List[_OrderedDelivery]:
+            out = []
+            while q and q[0].deliver_at <= t and len(out) < max_messages:
+                out.append(heapq.heappop(q))
+            return out
+
+        if long_poll:
+            got = available(now)
+            if not got and q:
+                wake = min(q[0].deliver_at, now + self.long_poll_window)
+                now = max(now, wake)
+                got = available(now)
+            elif not got:
+                now += self.long_poll_window
+        else:
+            got = []
+            for d in available(now):
+                if self._rng.random() < self.short_poll_miss_prob:
+                    heapq.heappush(q, d)  # not seen this poll
+                else:
+                    got.append(d)
+        if got:
+            self.metrics.messages_delivered += len(got)
+        else:
+            self.metrics.empty_polls += 1
+        return now, [d.as_delivery() for d in got]
+
+    def delete_batch(self, worker: int, receipts: List[int], at_time: float) -> float:
+        """DeleteMessageBatch — one API call per ≤10 receipts."""
+        n_calls = max(1, -(-len(receipts) // 10))
+        self.metrics.sqs_api_calls += n_calls
+        return at_time + self.poll_rtt
+
+    def pending(self, worker: int) -> int:
+        return len(self._queues[worker])
+
+
+@dataclasses.dataclass(order=True)
+class _OrderedDelivery:
+    deliver_at: float
+    receipt: int
+    target: int = dataclasses.field(compare=False)
+    blob: Chunk = dataclasses.field(compare=False)
+
+    def as_delivery(self) -> Delivery:
+        return Delivery(
+            deliver_at=self.deliver_at,
+            target=self.target,
+            blob=self.blob,
+            attributes={},
+            receipt=self.receipt,
+        )

@@ -1,0 +1,290 @@
+"""End-to-end FSD-Inference run orchestration (the deterministic simulator).
+
+``run_fsi`` is the entry point: partition the network, build comm plans and
+offline worker artifacts, launch the worker tree, execute the FSI algorithm
+layer-by-layer on every (simulated) Lambda, then Barrier + Reduce the output
+panels to worker 0.  Every byte is really serialized/compressed/capped and
+billed; worker clocks advance per the latency model, so the result carries
+both the *output* (validated against the dense oracle in tests) and the
+*latency + $-cost* profile (validated against the paper's §VI numbers in
+benchmarks).
+
+Fault tolerance: stragglers are modeled as slowed-down workers; when
+``reinvoke_stragglers`` is set, workers whose per-layer compute exceeds
+``straggler_timeout`` × the fleet median are re-invoked (cold start + weight
+reload penalty, then full speed), per the pre-emptive retry literature the
+paper cites.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Literal, Optional
+
+import numpy as np
+
+from repro.core.cost_model import (
+    AWS_PRICING,
+    CostBreakdown,
+    PricingConstants,
+    WorkloadStats,
+    object_cost,
+    queue_cost,
+    serial_cost,
+)
+from repro.core.fsi import (
+    WorkerArtifacts,
+    fsi_object_recv_and_finish,
+    fsi_object_send_and_local,
+    fsi_queue_recv_and_finish,
+    fsi_queue_send_and_local,
+    prepare_worker_artifacts,
+    run_serial,
+)
+from repro.core.partitioner import PartitionResult, partition_network
+from repro.core.send_recv import build_comm_plans
+from repro.data.graphchallenge import GraphChallengeNet
+from repro.faas.collectives import barrier, reduce_to_root
+from repro.faas.launch_tree import TreeSpec, launch_schedule
+from repro.faas.object_service import ObjectFabric
+from repro.faas.queue_service import QueueFabric
+from repro.faas.worker import ComputeModel, WorkerState
+
+__all__ = ["LatencyModel", "FsiRunResult", "run_fsi"]
+
+Channel = Literal["queue", "object", "serial"]
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    """Service latency/throughput constants (defaults: public AWS figures)."""
+
+    invoke_latency: float = 0.050
+    cold_start: float = 0.250
+    cold_start_jitter: float = 0.100
+    sns_publish_latency: float = 0.012
+    sns_fanout_latency: float = 0.020
+    sqs_poll_rtt: float = 0.008
+    sqs_long_poll_window: float = 2.0
+    s3_put_latency: float = 0.030
+    s3_get_first_byte: float = 0.018
+    s3_list_latency: float = 0.025
+    s3_bandwidth: float = 90e6
+    weight_load_bandwidth: float = 250e6  # S3 model-shard read at startup
+    straggler_prob: float = 0.0
+    straggler_slowdown: float = 4.0
+
+
+@dataclasses.dataclass
+class FsiRunResult:
+    output: np.ndarray                    # x^L assembled at worker 0 [N, batch]
+    channel: Channel
+    P: int
+    worker_times: np.ndarray              # T_i (seconds, incl. launch offset)
+    stats: WorkloadStats
+    cost: CostBreakdown
+    partition: Optional[PartitionResult]
+    raw_exchange_bytes: int               # pre-compression volume (Table III)
+    wire_exchange_bytes: int              # compressed bytes on the channel
+    metrics: Dict[str, float]
+
+    @property
+    def mean_runtime(self) -> float:
+        return float(self.worker_times.mean())
+
+    @property
+    def makespan(self) -> float:
+        return float(self.worker_times.max())
+
+    def per_sample_ms(self, batch: int) -> float:
+        return self.makespan / batch * 1e3
+
+
+def run_fsi(
+    net: GraphChallengeNet,
+    x0: np.ndarray,
+    P: int = 8,
+    channel: Channel = "queue",
+    partition_method: str = "hgp",
+    memory_mb: Optional[int] = None,
+    latency: Optional[LatencyModel] = None,
+    compute: Optional[ComputeModel] = None,
+    pricing: PricingConstants = AWS_PRICING,
+    branching: int = 4,
+    seed: int = 0,
+    exploit_sparsity: bool = True,
+    reinvoke_stragglers: bool = False,
+    straggler_timeout: float = 3.0,
+    partition: Optional[PartitionResult] = None,
+) -> FsiRunResult:
+    latency = latency or LatencyModel()
+    compute = compute or ComputeModel()
+    batch = x0.shape[1]
+
+    # ---------------- Serial short-circuit ---------------------------------
+    if channel == "serial" or P == 1:
+        memory_mb = memory_mb or pricing.max_lambda_memory_mb
+        out, w = run_serial(net, x0, memory_mb=memory_mb, compute=compute)
+        w.charge_seconds(net.model_bytes / latency.weight_load_bandwidth)
+        times = np.array([w.clock + latency.cold_start])
+        stats = WorkloadStats(P=1, mean_runtime_s=float(times.mean()), memory_mb=memory_mb)
+        return FsiRunResult(
+            output=out, channel="serial", P=1, worker_times=times, stats=stats,
+            cost=serial_cost(stats, pricing), partition=None,
+            raw_exchange_bytes=0, wire_exchange_bytes=0,
+            metrics={"flops": w.flops},
+        )
+
+    # ---------------- offline partitioning + plans --------------------------
+    if partition is None:
+        partition = partition_network(net.layers, P, method=partition_method, seed=seed)
+    plans = build_comm_plans(net.layers, partition)
+    artifacts = prepare_worker_artifacts(net.layers, partition, plans)
+
+    memory_mb = memory_mb or _default_memory_mb(net.neurons)
+    for a in artifacts:
+        need = a.memory_bytes(batch)
+        if need > memory_mb * 1024 * 1024:
+            raise MemoryError(
+                f"worker {a.rank} shard needs ~{need/1e6:.0f}MB > {memory_mb}MB; "
+                f"increase P or memory"
+            )
+
+    # ---------------- launch tree -------------------------------------------
+    ready = launch_schedule(
+        P, branching=branching, invoke_latency=latency.invoke_latency,
+        cold_start=latency.cold_start, cold_start_jitter=latency.cold_start_jitter,
+        seed=seed,
+    )
+    rng = np.random.default_rng(seed + 99)
+    workers: List[WorkerState] = []
+    for m in range(P):
+        w = WorkerState(rank=m, memory_mb=memory_mb, start_time=float(ready[m]))
+        if latency.straggler_prob > 0 and rng.random() < latency.straggler_prob:
+            w.slowdown = latency.straggler_slowdown
+        # weight shard load from object storage (paper: workers reload per request)
+        w.charge_seconds(
+            artifacts[m].weight_nnz * 8 / latency.weight_load_bandwidth
+        )
+        workers.append(w)
+
+    # ---------------- fabric -------------------------------------------------
+    if channel == "queue":
+        fabric = QueueFabric(
+            P, pricing=pricing,
+            publish_latency=latency.sns_publish_latency,
+            fanout_latency=latency.sns_fanout_latency,
+            poll_rtt=latency.sqs_poll_rtt,
+            long_poll_window=latency.sqs_long_poll_window,
+            seed=seed,
+        )
+    elif channel == "object":
+        fabric = ObjectFabric(
+            P,
+            put_latency=latency.s3_put_latency,
+            get_first_byte=latency.s3_get_first_byte,
+            list_latency=latency.s3_list_latency,
+            bandwidth=latency.s3_bandwidth,
+        )
+    else:
+        raise ValueError(channel)
+
+    # ---------------- layer loop --------------------------------------------
+    x_panels: List[np.ndarray] = [
+        x0[artifacts[m].x0_rows].astype(np.float32) for m in range(P)
+    ]
+    for k in range(net.n_layers):
+        t_before = [w.clock for w in workers]
+        # Phase 1 — every worker publishes and runs its overlapped local MVP.
+        bufs: List[np.ndarray] = []
+        for m in range(P):
+            art = artifacts[m].layers[k]
+            if channel == "queue":
+                bufs.append(fsi_queue_send_and_local(
+                    art, x_panels[m], workers[m], fabric, compute,
+                    exploit_sparsity=exploit_sparsity,
+                ))
+            else:
+                bufs.append(fsi_object_send_and_local(
+                    art, x_panels[m], workers[m], fabric, compute,
+                    exploit_sparsity=exploit_sparsity,
+                ))
+        # Phase 2 — every worker drains its channel and finishes the layer.
+        for m in range(P):
+            art = artifacts[m].layers[k]
+            if channel == "queue":
+                x_panels[m] = fsi_queue_recv_and_finish(
+                    art, bufs[m], workers[m], fabric, compute, net.bias
+                )
+            else:
+                x_panels[m] = fsi_object_recv_and_finish(
+                    art, bufs[m], workers[m], fabric, compute, net.bias
+                )
+        # Straggler slowdown applies to *active* work (compute, pack/unpack)
+        # via WorkerState.slowdown at the charge sites — never to channel
+        # waits, which would compound across the fleet.
+        if reinvoke_stragglers:
+            layer_cost = np.array([w.clock - t0 for w, t0 in zip(workers, t_before)])
+            med = float(np.median(layer_cost))
+            for m, w in enumerate(workers):
+                if med > 0 and layer_cost[m] > straggler_timeout * med and w.slowdown > 1:
+                    # re-invoke: fresh container (cold start + weight reload),
+                    # then it runs at full speed — the paper's cited
+                    # pre-emptive retry mitigation
+                    w.slowdown = 1.0
+                    w.charge_seconds(
+                        latency.cold_start
+                        + artifacts[m].weight_nnz * 8 / latency.weight_load_bandwidth
+                    )
+
+    # ---------------- barrier + reduce (Algorithm lines 19-20) ---------------
+    tree = TreeSpec(n_workers=P, branching=branching)
+    barrier(workers, fabric, tree)
+    panels = [x_panels[m] for m in range(P)]
+    gathered = reduce_to_root(workers, fabric, tree, panels, op="concat_rows")
+    order = np.argsort(np.concatenate([artifacts[m].layers[-1].out_rows for m in range(P)]))
+    output = gathered[order]
+
+    # ---------------- billing -------------------------------------------------
+    times = np.array([w.abs_time for w in workers])
+    stats = WorkloadStats(
+        P=P, mean_runtime_s=float(np.array([w.clock for w in workers]).mean()),
+        memory_mb=memory_mb,
+    )
+    if channel == "queue":
+        qm = fabric.metrics
+        stats.publish_units = qm.publish_billed_units
+        stats.bytes_sns_to_sqs = qm.bytes_sns_to_sqs
+        stats.sqs_api_calls = qm.sqs_api_calls
+        cost = queue_cost(stats, pricing)
+        raw, wire = qm.raw_bytes, qm.bytes_sns_to_sqs
+        extra = {
+            "publish_api_calls": qm.publish_api_calls,
+            "messages": qm.messages_delivered,
+            "empty_polls": qm.empty_polls,
+        }
+    else:
+        om = fabric.metrics
+        stats.s3_puts = om.puts
+        stats.s3_gets = om.gets
+        stats.s3_lists = om.lists
+        cost = object_cost(stats, pricing)
+        raw, wire = om.raw_bytes, om.bytes_written
+        extra = {"nul_files": om.nul_files}
+
+    metrics = {
+        "flops_total": float(sum(w.flops for w in workers)),
+        "imbalance": partition.imbalance(net.layers),
+        **{k: float(v) for k, v in extra.items()},
+    }
+    return FsiRunResult(
+        output=output, channel=channel, P=P, worker_times=times, stats=stats,
+        cost=cost, partition=partition,
+        raw_exchange_bytes=int(raw), wire_exchange_bytes=int(wire),
+        metrics=metrics,
+    )
+
+
+def _default_memory_mb(neurons: int) -> int:
+    """Paper §VI-A1 worker sizing: 1000/1500/2000/4000MB for N=1k..64k."""
+    return {1024: 1000, 4096: 1500, 16384: 2000, 65536: 4000}.get(neurons, 2000)

@@ -1,0 +1,78 @@
+"""Per-worker state for the simulated Lambda fleet."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+__all__ = ["WorkerState", "ComputeModel", "estimate_worker_memory_bytes"]
+
+
+@dataclasses.dataclass
+class ComputeModel:
+    """Maps work to seconds on a Lambda instance.
+
+    AWS allocates ~1 vCPU per 1769MB of configured memory (capped at 6);
+    effective numpy SpMM throughput per vCPU is taken from public Lambda
+    measurements (~1.8 GFLOP/s for scipy-like sparse kernels).
+    """
+
+    flops_per_vcpu: float = 1.8e9
+    pack_bandwidth: float = 400e6    # zlib level-1 compress, B/s
+    unpack_bandwidth: float = 900e6  # zlib decompress, B/s
+    max_vcpus: float = 6.0
+    vcpu_per_mb: float = 1.0 / 1769.0
+
+    def vcpus(self, memory_mb: int) -> float:
+        return min(self.max_vcpus, max(0.07, memory_mb * self.vcpu_per_mb))
+
+    def flops_seconds(self, flops: float, memory_mb: int) -> float:
+        return flops / (self.flops_per_vcpu * self.vcpus(memory_mb))
+
+
+@dataclasses.dataclass
+class WorkerState:
+    rank: int
+    memory_mb: int
+    clock: float = 0.0               # seconds since its own invocation epoch
+    start_time: float = 0.0          # absolute ready time from the launch tree
+    slowdown: float = 1.0            # straggler factor on compute
+    flops: float = 0.0
+    bytes_sent: int = 0
+    bytes_received: int = 0
+    messages_sent: int = 0
+    messages_received: int = 0
+    mem_high_water: int = 0
+
+    @property
+    def abs_time(self) -> float:
+        return self.start_time + self.clock
+
+    def advance_to_abs(self, t_abs: float) -> None:
+        self.clock = max(self.clock, t_abs - self.start_time)
+
+    def charge_compute(self, flops: float, model: ComputeModel) -> None:
+        self.flops += flops
+        self.clock += model.flops_seconds(flops, self.memory_mb) * self.slowdown
+
+    def charge_seconds(self, s: float) -> None:
+        self.clock += s
+
+    def touch_memory(self, n_bytes: int) -> None:
+        self.mem_high_water = max(self.mem_high_water, n_bytes)
+
+
+PY_OVERHEAD = 1.4  # interpreter + allocator overhead on top of raw buffers
+
+
+def estimate_worker_memory_bytes(
+    weight_nnz: int, max_needed_rows: int, max_out_rows: int, batch: int,
+    bytes_per_nnz: int = 8, act_bytes: int = 4,
+) -> int:
+    """Peak resident bytes: CSR weights + input/output activation panels
+    (double-buffered across the layer boundary) + one in-flight message."""
+    weights = weight_nnz * bytes_per_nnz
+    acts = (max_needed_rows + max_out_rows) * batch * act_bytes
+    return int((weights + acts) * PY_OVERHEAD)

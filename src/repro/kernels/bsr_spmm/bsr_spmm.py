@@ -1,0 +1,72 @@
+"""Fused BSR SpMM + bias + ReLU + clip — the GraphChallenge layer op.
+
+Hardware adaptation (DESIGN.md §3/§7): the paper's Lambda workers run
+scalar-granular CSR SpMM on CPUs; the MXU wants dense tiles, so the weight
+sparsity pattern is snapped to an (bm × bn) block grid offline
+(``core.sparse.bsr_from_csr``) and the kernel multiplies only the nonzero
+blocks.  GraphChallenge RadiX-Net butterflies are 32-wide digit windows, so
+blocks capture the structure with near-zero fill-in when bn ≤ 32·stride.
+
+Layout (padded BSR, built offline):
+  blocks  f32[NBR, K, bm, bn]   dense nonzero blocks, zero-padded to K/row
+  cols    i32[NBR, K]           block-column ids (0 for padding — safe)
+  x       f32[N, B]             dense activations (batch panel)
+  y       f32[M, B]             y = clip(relu(Wx + bias), 0, clip)
+
+Grid: (row-blocks, batch-panels).  The K nonzero blocks of one row-block are
+staged into VMEM via the BlockSpec; x panels are sliced dynamically by block
+column id (pl.ds) from the full-x VMEM block — N·bb·4B must fit VMEM, which
+holds for every GraphChallenge size at bb = 128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cols_ref, blocks_ref, x_ref, y_ref, *, bn: int, k_max: int,
+            bias: float, clip: float):
+    bm = blocks_ref.shape[2]
+    bb = y_ref.shape[1]
+    acc0 = jnp.zeros((bm, bb), jnp.float32)
+
+    def body(i, acc):
+        c = cols_ref[0, i]
+        xb = x_ref[pl.ds(c * bn, bn), :]
+        wb = blocks_ref[0, i]
+        return acc + jnp.dot(wb, xb, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, k_max, body, acc0)
+    y_ref[...] = jnp.clip(acc + bias, 0.0, clip)
+
+
+def bsr_spmm_fused(
+    blocks: jnp.ndarray,   # [NBR, K, bm, bn]
+    cols: jnp.ndarray,     # [NBR, K] int32
+    x: jnp.ndarray,        # [N, B]
+    bias: float,
+    clip: float = 32.0,
+    batch_block: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    nbr, k_max, bm, bn = blocks.shape
+    n, b = x.shape
+    bb = min(batch_block, b)
+    assert b % bb == 0, "batch must divide batch_block"
+    grid = (nbr, b // bb)
+    return pl.pallas_call(
+        functools.partial(_kernel, bn=bn, k_max=k_max, bias=bias, clip=clip),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k_max), lambda i, j: (i, 0)),            # cols
+            pl.BlockSpec((1, k_max, bm, bn), lambda i, j: (i, 0, 0, 0)),  # blocks
+            pl.BlockSpec((n, bb), lambda i, j: (0, j)),               # x panel
+        ],
+        out_specs=pl.BlockSpec((bm, bb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nbr * bm, b), jnp.float32),
+        interpret=interpret,
+    )(cols, blocks, x)

@@ -1,0 +1,34 @@
+"""Jitted public wrapper around the BSR SpMM Pallas kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse import BSRMatrix, bsr_from_csr
+from repro.kernels.bsr_spmm.bsr_spmm import bsr_spmm_fused
+
+__all__ = ["sparse_layer_apply", "prepare_bsr_operands", "bsr_spmm"]
+
+
+def prepare_bsr_operands(bsr: BSRMatrix):
+    """Padded (blocks, cols) device arrays from an offline BSR matrix."""
+    blocks, cols, _ = bsr.padded()
+    return jnp.asarray(blocks, jnp.float32), jnp.asarray(cols, jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("bias", "clip", "interpret"))
+def bsr_spmm(blocks, cols, x, *, bias: float, clip: float = 32.0,
+             interpret: bool = True):
+    return bsr_spmm_fused(blocks, cols, x, bias=bias, clip=clip,
+                          interpret=interpret)
+
+
+def sparse_layer_apply(bsr: BSRMatrix, x, bias: float, clip: float = 32.0,
+                       interpret: bool = True):
+    """One GraphChallenge layer: y = clip(relu(W·x + b), 0, clip)."""
+    blocks, cols = prepare_bsr_operands(bsr)
+    return bsr_spmm(blocks, cols, jnp.asarray(x, jnp.float32),
+                    bias=bias, clip=clip, interpret=interpret)

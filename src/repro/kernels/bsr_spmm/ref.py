@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused BSR SpMM kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bsr_to_dense(blocks: np.ndarray, cols: np.ndarray, n_cols_blocks: int) -> np.ndarray:
+    """Padded BSR → dense weight matrix (numpy, test-side)."""
+    nbr, k, bm, bn = blocks.shape
+    out = np.zeros((nbr * bm, n_cols_blocks * bn), dtype=blocks.dtype)
+    for br in range(nbr):
+        for i in range(k):
+            c = int(cols[br, i])
+            # zero padding blocks contribute nothing regardless of c
+            out[br * bm:(br + 1) * bm, c * bn:(c + 1) * bn] += blocks[br, i]
+    return out
+
+
+def bsr_spmm_fused_ref(blocks, cols, x, bias: float, clip: float = 32.0):
+    """y = clip(relu(W @ x + bias), 0, clip) via dense reconstruction."""
+    n = x.shape[0]
+    bn = blocks.shape[-1]
+    dense = bsr_to_dense(np.asarray(blocks, np.float32), np.asarray(cols), n // bn)
+    y = jnp.asarray(dense) @ jnp.asarray(x, jnp.float32) + bias
+    return jnp.clip(y, 0.0, clip)

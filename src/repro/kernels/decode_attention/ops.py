@@ -1,0 +1,18 @@
+"""Jitted wrapper for the split-KV decode kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.decode_attention import decode_attention
+
+__all__ = ["decode_mha"]
+
+
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_mha(q, k_cache, v_cache, cache_len, *, block_k: int = 512,
+               interpret: bool = True):
+    return decode_attention(q, k_cache, v_cache, cache_len,
+                            block_k=block_k, interpret=interpret)

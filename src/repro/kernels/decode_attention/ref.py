@@ -1,0 +1,19 @@
+"""Oracle for the split-KV decode kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention as model_decode_attention
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    """q [B,H,D], caches [B,KV,S,D] → (out [B,H,D], lse [B,H])."""
+    out, lse = model_decode_attention(
+        q[:, None],                          # [B,1,H,D]
+        k_cache.transpose(0, 2, 1, 3),       # [B,S,KV,D]
+        v_cache.transpose(0, 2, 1, 3),
+        cache_len=jnp.asarray(cache_len),
+        return_lse=True,
+    )
+    return out[:, 0], lse[:, 0]

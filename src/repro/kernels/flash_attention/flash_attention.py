@@ -1,0 +1,102 @@
+"""Flash attention (prefill) Pallas kernel — TPU BlockSpec pattern.
+
+Grid: (batch·heads, n_q_blocks, n_kv_blocks).  TPU grids execute the last
+dimension sequentially per core, so the (m, l, acc) running-softmax state
+lives in VMEM scratch and persists across the kv-block sweep; the output is
+normalized and written on the final kv block.  Causal masking is applied
+per tile; fully-masked tiles still execute (masked) — skipping them is a
+documented hillclimb (§Perf).
+
+Block shapes are MXU-aligned (bq, bk multiples of 128; D = head_dim is 64 or
+128 for every assigned arch).  GQA folds into the k/v index_map (h → h//G).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, n_k: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == n_k - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,       # [B, H, Sq, D]
+    k: jnp.ndarray,       # [B, KV, Sk, D]
+    v: jnp.ndarray,       # [B, KV, Sk, D]
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    n_q, n_k = Sq // bq, Sk // bk
+    grid = (B * H, n_q, n_k)
+    scale = 1.0 / (D ** 0.5)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, n_k=n_k, causal=causal,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D),
+                         lambda bh, qi, kj: (bh // H, bh % H, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda bh, qi, kj: (bh // H, (bh % H) // G, kj, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda bh, qi, kj: (bh // H, (bh % H) // G, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda bh, qi, kj: (bh // H, bh % H, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, D), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

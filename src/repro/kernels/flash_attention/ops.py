@@ -1,0 +1,18 @@
+"""Jitted wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+__all__ = ["mha"]
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def mha(q, k, v, *, causal: bool = True, block_q: int = 128,
+        block_k: int = 128, interpret: bool = True):
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=interpret)

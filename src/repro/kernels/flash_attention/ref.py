@@ -1,0 +1,17 @@
+"""Oracle for the flash attention kernel (reuses the model-side reference)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import full_attention
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q [B,H,Sq,D], k/v [B,KV,Sk,D] → o [B,H,Sq,D] (naive softmax)."""
+    # model-side reference uses [B, S, H, D] layout
+    o = full_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal,
+    )
+    return o.transpose(0, 2, 1, 3)

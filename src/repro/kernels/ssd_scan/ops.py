@@ -1,0 +1,16 @@
+"""Jitted wrapper for the fused SSD kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+__all__ = ["ssd"]
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = True):
+    return ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

@@ -1,0 +1,20 @@
+"""Oracle for the fused SSD kernel (reuses the model-side chunked SSD)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, chunk: int = 128):
+    """x [B,H,L,P], dt [B,H,L], Bm/Cm [B,G,L,N] → (y [B,H,L,P], S [B,H,P,N])."""
+    y, s = ssd_chunked(
+        x.transpose(0, 2, 1, 3),       # [B,L,H,P]
+        dt.transpose(0, 2, 1),         # [B,L,H]
+        A,
+        Bm.transpose(0, 2, 1, 3),      # [B,L,G,N]
+        Cm.transpose(0, 2, 1, 3),
+        chunk=chunk,
+    )
+    return y.transpose(0, 2, 1, 3), s

@@ -1,0 +1,108 @@
+"""Fused chunked-SSD Pallas kernel (mamba2 / zamba2 backbone hot spot).
+
+One (batch, head) slice per grid row; the last grid dim sweeps chunks
+sequentially, carrying the [P, N] state in VMEM scratch — the inter-chunk
+recurrence never leaves VMEM, and each chunk's O(Q²) decay/score matrix
+lives only inside its grid step (the memory property the pure-JAX version
+achieves with per-chunk remat).
+
+Per chunk (Q = chunk length, P = head dim, N = state dim):
+  l      = cumsum(dt·A)                       [Q]
+  M      = (C Bᵀ) ⊙ exp(l_t − l_s) ⊙ causal  [Q, Q]
+  y      = M (x·dt)  +  exp(l) · (C S_prev)   [Q, P]
+  S_next = exp(l_Q)·S_prev + Σ_s exp(l_Q−l_s)·dt_s·B_s⊗x_s
+
+Inputs are pre-split per head group (B/C already expanded to heads by the
+wrapper's index_map: g = h // rep).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_final_ref, s_scr, *,
+            n_chunks: int, q: int):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)       # [Q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)     # [Q]
+    a = a_ref[0]                              # scalar A (negative)
+    bm = b_ref[0, 0].astype(jnp.float32)      # [Q, N]
+    cm = c_ref[0, 0].astype(jnp.float32)      # [Q, N]
+
+    l = jnp.cumsum(dt * a)                    # [Q] (≤ 0, decreasing)
+    # intra-chunk
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)   # [Q, Q]
+    diff = jnp.clip(l[:, None] - l[None, :], -60.0, 0.0)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    m = jnp.where(t_idx >= s_idx, cb * jnp.exp(diff), 0.0)
+    xdt = x * dt[:, None]
+    y = jnp.dot(m, xdt, preferred_element_type=jnp.float32)      # [Q, P]
+    # inter-chunk contribution from the carried state
+    s_prev = s_scr[...]                       # [P, N]
+    y += jnp.exp(jnp.clip(l, -60.0, 0.0))[:, None] * jnp.dot(
+        cm, s_prev.T, preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # state update
+    w = jnp.exp(jnp.clip(l[-1] - l, -60.0, 0.0)) * dt             # [Q]
+    s_new = s_prev * jnp.exp(jnp.clip(l[-1], -60.0, 0.0)) + jnp.dot(
+        (x * w[:, None]).T, bm, preferred_element_type=jnp.float32)
+    s_scr[...] = s_new
+
+    @pl.when(cj == n_chunks - 1)
+    def _finish():
+        s_final_ref[0] = s_new.astype(s_final_ref.dtype)
+
+
+def ssd_scan(
+    x: jnp.ndarray,    # [B, H, L, P]
+    dt: jnp.ndarray,   # [B, H, L]
+    A: jnp.ndarray,    # [H] (negative)
+    Bm: jnp.ndarray,   # [B, G, L, N]
+    Cm: jnp.ndarray,   # [B, G, L, N]
+    chunk: int = 128,
+    interpret: bool = True,
+):
+    """Returns (y [B, H, L, P], final_state [B, H, P, N])."""
+    B, H, L, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    rep = H // G
+    assert L % chunk == 0
+    n_chunks = L // chunk
+    grid = (B * H, n_chunks)
+
+    y, s_final = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n_chunks, q=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda bh, cj: (bh // H, bh % H, cj, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bh, cj: (bh // H, bh % H, cj)),
+            pl.BlockSpec((1,), lambda bh, cj: (bh % H,)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda bh, cj: (bh // H, (bh % H) // rep, cj, 0)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda bh, cj: (bh // H, (bh % H) // rep, cj, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda bh, cj: (bh // H, bh % H, cj, 0)),
+            pl.BlockSpec((1, P, N), lambda bh, cj: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, L, P), x.dtype),
+            jax.ShapeDtypeStruct((B * H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm)
+    return y, s_final.reshape(B, H, P, N)

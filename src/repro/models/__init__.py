@@ -1,0 +1,12 @@
+"""Model zoo: pure-JAX functional modules (params are pytrees of arrays).
+
+Every architecture exposes:
+
+* ``init(rng, cfg) -> params``
+* ``forward(params, batch, cfg, *, mesh_info=None) -> logits``  (teacher-forced)
+* ``prefill(params, batch, cfg) -> (logits, cache)``
+* ``decode_step(params, token, cache, cfg) -> (logits, cache)``
+
+plus ``param_count(cfg)`` / ``active_param_count(cfg)`` used by the roofline's
+MODEL_FLOPS = 6·N·D term.
+"""

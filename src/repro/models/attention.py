@@ -1,0 +1,237 @@
+"""Attention score computation: chunked (flash-style) softmax streaming.
+
+Three entry points:
+
+* :func:`chunked_causal_attention` — training/prefill.  Never materializes
+  the full [Sq, Sk] score matrix: scans KV chunks with running (max, sum,
+  acc) — the pure-jnp flash algorithm, and the oracle for the Pallas
+  ``flash_attention`` kernel.
+* :func:`decode_attention` — single-query attention against a KV cache,
+  scanning KV chunks (the oracle for the ``decode_attention`` kernel).  When
+  the cache is sequence-sharded across devices, partial (acc, lse) pairs are
+  psum-combined by the caller (split-KV / flash-decoding).
+* :func:`full_attention` — naive reference for tests.
+
+All math accumulates in fp32.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ACC = jnp.float32
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q [B,Sq,H,D], k [B,Sk,KV,D] → scores [B,KV,G,Sq,Sk] (H = KV·G)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=ACC)
+
+
+def full_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    causal: bool = True, q_offset: int = 0,
+) -> jnp.ndarray:
+    """Naive reference (materializes scores) — test oracle only."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    Sk = k.shape[1]
+    scores = _gqa_scores(q, k) / jnp.sqrt(D).astype(ACC)
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=ACC)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def chunked_causal_attention(
+    q: jnp.ndarray,             # [B, Sq, H, D]
+    k: jnp.ndarray,             # [B, Sk, KV, D]
+    v: jnp.ndarray,             # [B, Sk, KV, D]
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    causal: bool = True,
+    q_offset: int = 0,          # global position of q[0] (prefill continuation)
+) -> jnp.ndarray:
+    """Flash-style attention: O(Sq·Sk) compute, O(chunk²) memory."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    n_q = -(-Sq // q_chunk)
+    n_k = -(-Sk // kv_chunk)
+    # pad to whole chunks
+    q_pad = n_q * q_chunk - Sq
+    k_pad = n_k * kv_chunk - Sk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    qs = q.reshape(B, n_q, q_chunk, KV, G, D).transpose(1, 0, 3, 4, 2, 5)
+    ks = k.reshape(B, n_k, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(B, n_k, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+    scale = 1.0 / jnp.sqrt(D).astype(ACC)
+
+    kv_valid = (jnp.arange(n_k * kv_chunk) < Sk).reshape(n_k, kv_chunk)
+
+    def q_body(qi, q_blk):
+        # q_blk [B, KV, G, q_chunk, D]
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, ACC)
+        l0 = jnp.zeros((B, KV, G, q_chunk), ACC)
+        a0 = jnp.zeros((B, KV, G, q_chunk, D), ACC)
+
+        def kv_body(carry, inp):
+            m, l, acc = carry
+            kj, k_blk, v_blk, valid = inp
+            s = jnp.einsum("bkgqd,bksd->bkgqs", q_blk, k_blk,
+                           preferred_element_type=ACC) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+                kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+                mask = (qpos[:, None] >= kpos[None, :]) & valid[None, :]
+            else:
+                mask = jnp.broadcast_to(valid[None, :], (q_chunk, kv_chunk))
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=ACC,
+            )
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), (jnp.arange(n_k), ks, vs, kv_valid)
+        )
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    # Checkpoint per q-chunk: naive autodiff through the kv scan would stash
+    # every chunk's probability block — O(Sq·Sk) residuals, exactly what
+    # flash attention exists to avoid.  Rematerializing per q-chunk bounds
+    # backward residuals to one chunk row.
+    q_body = jax.checkpoint(q_body, prevent_cse=False)
+    outs = jax.lax.map(lambda args: q_body(*args), (jnp.arange(n_q), qs))
+    # outs [n_q, B, KV, G, q_chunk, D] → [B, Sq, H, D]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, n_q * q_chunk, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,             # [B, 1, H, D] — one new token
+    k_cache: jnp.ndarray,       # [B, S, KV, D] (local shard if seq-sharded)
+    v_cache: jnp.ndarray,       # [B, S, KV, D]
+    cache_len: Optional[jnp.ndarray] = None,  # valid prefix length (≤ S)
+    kv_chunk: int = 2048,
+    return_lse: bool = False,
+) -> jnp.ndarray | Tuple[jnp.ndarray, jnp.ndarray]:
+    """Streaming single-token attention over the KV cache.
+
+    With ``return_lse=True`` returns the *normalized* partial output plus its
+    logsumexp, so a sequence-sharded caller combines partials across devices
+    as an lse-weighted average:
+        w_i = exp(lse_i - max_i lse_i);  out = psum(w_i·out_i) / psum(w_i)
+    — the split-KV / flash-decoding scheme.
+    """
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    kv_chunk = min(kv_chunk, S)
+    n_k = -(-S // kv_chunk)
+    pad = n_k * kv_chunk - S
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ks = k_cache.reshape(B, n_k, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+    vs = v_cache.reshape(B, n_k, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+    qg = q.reshape(B, KV, G, D)
+    scale = 1.0 / jnp.sqrt(D).astype(ACC)
+    if cache_len is None:
+        cache_len = jnp.asarray(S, jnp.int32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, k_blk, v_blk = inp
+        s = jnp.einsum("bkgd,bksd->bkgs", qg, k_blk,
+                       preferred_element_type=ACC) * scale
+        kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+        valid = kpos < cache_len
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgs,bksd->bkgd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=ACC,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G), NEG_INF, ACC)
+    l0 = jnp.zeros((B, KV, G), ACC)
+    a0 = jnp.zeros((B, KV, G, D), ACC)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (jnp.arange(n_k), ks, vs))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    if return_lse:
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out.reshape(B, 1, H, D), lse.reshape(B, 1, H)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def decode_attention_dense(
+    q: jnp.ndarray,             # [B, 1, H, D]
+    k_cache: jnp.ndarray,       # [B, S, KV, D]
+    v_cache: jnp.ndarray,       # [B, S, KV, D]
+    cache_len,                  # valid prefix length
+) -> jnp.ndarray:
+    """Single-token attention over the full cache, no chunking.
+
+    Under pjit this is the *sequence-shardable* decode path: the scores
+    einsum contracts the sharded S dim, so the partitioner emits masked
+    partial softmax + all-reduce — exactly split-KV decode, chosen by the
+    compiler instead of hand-written scans (which would reshape the sharded
+    dim and force all-gathers).  Memory is fine because Sq = 1.
+    """
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, D)
+    scale = 1.0 / jnp.sqrt(D).astype(ACC)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                   preferred_element_type=ACC) * scale
+    valid = jnp.arange(S) < cache_len
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+                     v_cache, preferred_element_type=ACC)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def combine_split_kv(
+    out: jnp.ndarray,           # [B, 1, H, D] normalized local partial
+    lse: jnp.ndarray,           # [B, 1, H] local logsumexp
+    axis_names,
+) -> jnp.ndarray:
+    """Cross-device combine for sequence-sharded decode (inside shard_map)."""
+    m = jax.lax.pmax(lse, axis_names)
+    w = jnp.exp(lse - m)
+    num = jax.lax.psum(out * w[..., None], axis_names)
+    den = jax.lax.psum(w, axis_names)
+    return num / jnp.maximum(den[..., None], 1e-30)

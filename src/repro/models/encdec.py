@@ -1,0 +1,218 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+Encoder: bidirectional transformer over precomputed *frame embeddings* (the
+speech frontend is a stub per the assignment — ``input_specs()`` feeds
+[B, frontend_tokens, d_model] directly).  Decoder: causal self-attention +
+cross-attention over the encoder output.  Decode shapes exercise the decoder
+with cached self-attn KV + precomputed cross-attn KV (standard enc-dec
+serving); the encoder has no decode step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import (
+    chunked_causal_attention,
+    decode_attention_dense,
+)
+
+PyTree = Any
+ACC = jnp.float32
+
+
+def init_enc_block(key, cfg: ModelConfig) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_attn": L.init_rms_norm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.d_head),
+        "ln_mlp": L.init_rms_norm(cfg.d_model),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln_self": L.init_rms_norm(cfg.d_model),
+        "self_attn": L.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.d_head),
+        "ln_cross": L.init_rms_norm(cfg.d_model),
+        "cross_attn": L.init_attention(k2, cfg.d_model, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.d_head),
+        "ln_mlp": L.init_rms_norm(cfg.d_model),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init(key, cfg: ModelConfig) -> PyTree:
+    ke = jax.random.split(key, cfg.n_encoder_layers + cfg.n_layers + 2)
+    enc = [init_enc_block(ke[i], cfg) for i in range(cfg.n_encoder_layers)]
+    dec = [init_dec_block(ke[cfg.n_encoder_layers + i], cfg)
+           for i in range(cfg.n_layers)]
+    return {
+        "embed": L.init_embedding(ke[-2], cfg.padded_vocab(), cfg.d_model),
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "ln_enc": L.init_rms_norm(cfg.d_model),
+        "ln_f": L.init_rms_norm(cfg.d_model),
+    }
+
+
+def encode(params: PyTree, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames [B, S_src, d_model] (stub frontend output) → memory."""
+    x = frames.astype(L.PARAM_DTYPE)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :].repeat(B, axis=0)
+
+    def body(h, blk):
+        a = L.rms_norm(h, blk["ln_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_project(blk["attn"], a)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        o = chunked_causal_attention(q, k, v, causal=False)
+        h = h + L.out_project(blk["attn"], o, h.dtype)
+        m = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
+        return h + L.mlp(blk["mlp"], m), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _dec_block_train(blk, h, memory, cfg, positions, mem_positions):
+    a = L.rms_norm(h, blk["ln_self"], cfg.norm_eps)
+    q, k, v = L.qkv_project(blk["self_attn"], a)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = chunked_causal_attention(q, k, v)
+    h = h + L.out_project(blk["self_attn"], o, h.dtype)
+    c = L.rms_norm(h, blk["ln_cross"], cfg.norm_eps)
+    qc = jnp.einsum("bsd,dhk->bshk", c, blk["cross_attn"]["wq"],
+                    preferred_element_type=ACC).astype(h.dtype)
+    kc = jnp.einsum("bsd,dhk->bshk", memory, blk["cross_attn"]["wk"],
+                    preferred_element_type=ACC).astype(h.dtype)
+    vc = jnp.einsum("bsd,dhk->bshk", memory, blk["cross_attn"]["wv"],
+                    preferred_element_type=ACC).astype(h.dtype)
+    oc = chunked_causal_attention(qc, kc, vc, causal=False)
+    h = h + L.out_project(blk["cross_attn"], oc, h.dtype)
+    m = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
+    return h + L.mlp(blk["mlp"], m)
+
+
+def forward(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    """batch: {"frames": [B,S_src,d], "tokens": [B,S_tgt]} → logits."""
+    memory = encode(params, batch["frames"], cfg)
+    x = L.embed_tokens(params["embed"], batch["tokens"])
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :].repeat(B, axis=0)
+    mem_positions = jnp.arange(memory.shape[1])[None, :].repeat(B, axis=0)
+
+    def body(h, blk):
+        return _dec_block_train(blk, h, memory, cfg, positions, mem_positions), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.unembed(x, params["embed"])
+
+
+def loss_fn(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    return L.cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:],
+                                batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            max_len: int) -> Tuple[jnp.ndarray, PyTree]:
+    """Encode source + run decoder prompt; cache self-KV (padded) + cross-KV."""
+    memory = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    x = L.embed_tokens(params["embed"], tokens)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :].repeat(B, axis=0)
+    mem_positions = jnp.arange(memory.shape[1])[None, :].repeat(B, axis=0)
+    pad = max_len - S
+
+    def body(h, blk):
+        a = L.rms_norm(h, blk["ln_self"], cfg.norm_eps)
+        q, k, v = L.qkv_project(blk["self_attn"], a)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        o = chunked_causal_attention(q, k, v)
+        h = h + L.out_project(blk["self_attn"], o, h.dtype)
+        c = L.rms_norm(h, blk["ln_cross"], cfg.norm_eps)
+        qc = jnp.einsum("bsd,dhk->bshk", c, blk["cross_attn"]["wq"],
+                        preferred_element_type=ACC).astype(h.dtype)
+        kc = jnp.einsum("bsd,dhk->bshk", memory, blk["cross_attn"]["wk"],
+                        preferred_element_type=ACC).astype(h.dtype)
+        vc = jnp.einsum("bsd,dhk->bshk", memory, blk["cross_attn"]["wv"],
+                        preferred_element_type=ACC).astype(h.dtype)
+        oc = chunked_causal_attention(qc, kc, vc, causal=False)
+        h = h + L.out_project(blk["cross_attn"], oc, h.dtype)
+        m = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
+        h = h + L.mlp(blk["mlp"], m)
+        k_pad = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return h, (k_pad, v_pad, kc, vc)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (ks, vs, kcs, vcs) = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.unembed(x[:, -1:], params["embed"])
+    cache = {"k": ks, "v": vs, "kc": kcs, "vc": vcs,
+             "length": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
+                cfg: ModelConfig) -> Tuple[jnp.ndarray, PyTree]:
+    x = L.embed_tokens(params["embed"], token)
+    B = x.shape[0]
+    pos = cache["length"]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+
+    def body(h, inp):
+        blk, kc_self, vc_self, kc_cross, vc_cross = inp
+        a = L.rms_norm(h, blk["ln_self"], cfg.norm_eps)
+        q, k, v = L.qkv_project(blk["self_attn"], a)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kc_self = jax.lax.dynamic_update_slice(
+            kc_self, k.astype(kc_self.dtype), (0, pos, 0, 0))
+        vc_self = jax.lax.dynamic_update_slice(
+            vc_self, v.astype(vc_self.dtype), (0, pos, 0, 0))
+        o = decode_attention_dense(q, kc_self, vc_self, cache_len=pos + 1)
+        h = h + L.out_project(blk["self_attn"], o.astype(h.dtype), h.dtype)
+        c = L.rms_norm(h, blk["ln_cross"], cfg.norm_eps)
+        qc = jnp.einsum("bsd,dhk->bshk", c, blk["cross_attn"]["wq"],
+                        preferred_element_type=ACC).astype(h.dtype)
+        oc = decode_attention_dense(qc, kc_cross, vc_cross,
+                                    cache_len=kc_cross.shape[1])
+        h = h + L.out_project(blk["cross_attn"], oc.astype(h.dtype), h.dtype)
+        m = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
+        h = h + L.mlp(blk["mlp"], m)
+        return h, (kc_self, vc_self)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x,
+        (params["dec_blocks"], cache["k"], cache["v"], cache["kc"], cache["vc"]),
+    )
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.unembed(x, params["embed"])
+    return logits, {"k": ks, "v": vs, "kc": cache["kc"], "vc": cache["vc"],
+                    "length": pos + 1}

@@ -1,0 +1,307 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+The shared transformer block (a single parameter set) is applied before every
+``cfg.shared_attn_every``-th mamba block, consuming ``concat(hidden,
+embedding)`` — Zamba's trick for reusing one attention block across depth.
+Per-application LoRA deltas are omitted (noted in DESIGN.md §5).
+
+Layout: blocks are organized as ``n_groups`` groups of ``shared_attn_every``
+mamba blocks, each group preceded by the shared block.  Groups run under a
+``lax.scan`` over stacked group params; a trailing partial group handles
+``n_layers % shared_attn_every``.
+
+Decode carries: per-layer SSM/conv states + per-site KV caches (one per
+shared-block application).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models.attention import (
+    chunked_causal_attention,
+    decode_attention_dense,
+)
+
+PyTree = Any
+ACC = jnp.float32
+
+
+def n_shared_sites(cfg: ModelConfig) -> int:
+    return -(-cfg.n_layers // cfg.shared_attn_every)
+
+
+def _group_sizes(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_full_groups, group_len, tail_len)."""
+    g = cfg.shared_attn_every
+    return cfg.n_layers // g, g, cfg.n_layers % g
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_shared_block(key, cfg: ModelConfig) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    d2 = 2 * cfg.d_model
+    return {
+        "ln_attn": L.init_rms_norm(d2),
+        "attn": L.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+            q_in_dim=d2,
+        ),
+        "ln_mlp": L.init_rms_norm(d2),
+        "mlp": {
+            "wi_gate": L.dense_init(jax.random.fold_in(k2, 0), (d2, cfg.d_ff)),
+            "wi_up": L.dense_init(jax.random.fold_in(k2, 1), (d2, cfg.d_ff)),
+            "wo": L.dense_init(jax.random.fold_in(k2, 2), (cfg.d_ff, cfg.d_model),
+                               in_axis_size=cfg.d_ff),
+        },
+    }
+
+
+def init(key, cfg: ModelConfig) -> PyTree:
+    n_full, g, tail = _group_sizes(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = [M2.init_block(keys[i], cfg) for i in range(cfg.n_layers)]
+    grouped = blocks[: n_full * g]
+    groups = [
+        jax.tree.map(lambda *xs: jnp.stack(xs), *grouped[i * g : (i + 1) * g])
+        for i in range(n_full)
+    ]
+    params = {
+        "embed": L.init_embedding(keys[-3], cfg.padded_vocab(), cfg.d_model),
+        "groups": jax.tree.map(lambda *xs: jnp.stack(xs), *groups),
+        "tail": (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *blocks[n_full * g :])
+            if tail else None
+        ),
+        "shared": init_shared_block(keys[-2], cfg),
+        "ln_f": L.init_rms_norm(cfg.d_model),
+    }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# shared attention block
+# ---------------------------------------------------------------------------
+
+
+def shared_block_train(shared: PyTree, h: jnp.ndarray, emb: jnp.ndarray,
+                       cfg: ModelConfig, positions) -> jnp.ndarray:
+    xin = jnp.concatenate([h, emb], axis=-1)
+    a = L.rms_norm(xin, shared["ln_attn"], cfg.norm_eps)
+    q, k, v = L.qkv_project(shared["attn"], a)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = chunked_causal_attention(q, k, v)
+    h = h + L.out_project(shared["attn"], o, h.dtype)
+    m = L.rms_norm(jnp.concatenate([h, emb], axis=-1), shared["ln_mlp"],
+                   cfg.norm_eps)
+    gate = jnp.einsum("bsd,df->bsf", m, shared["mlp"]["wi_gate"],
+                      preferred_element_type=ACC)
+    up = jnp.einsum("bsd,df->bsf", m, shared["mlp"]["wi_up"],
+                    preferred_element_type=ACC)
+    hm = (jax.nn.silu(gate) * up).astype(h.dtype)
+    out = jnp.einsum("bsf,fd->bsd", hm, shared["mlp"]["wo"],
+                     preferred_element_type=ACC).astype(h.dtype)
+    return h + out
+
+
+def shared_block_prefill(shared, h, emb, cfg, positions, max_len):
+    xin = jnp.concatenate([h, emb], axis=-1)
+    a = L.rms_norm(xin, shared["ln_attn"], cfg.norm_eps)
+    q, k, v = L.qkv_project(shared["attn"], a)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = chunked_causal_attention(q, k, v)
+    h2 = h + L.out_project(shared["attn"], o, h.dtype)
+    m = L.rms_norm(jnp.concatenate([h2, emb], axis=-1), shared["ln_mlp"],
+                   cfg.norm_eps)
+    gate = jnp.einsum("bsd,df->bsf", m, shared["mlp"]["wi_gate"],
+                      preferred_element_type=ACC)
+    up = jnp.einsum("bsd,df->bsf", m, shared["mlp"]["wi_up"],
+                    preferred_element_type=ACC)
+    hm = (jax.nn.silu(gate) * up).astype(h.dtype)
+    h2 = h2 + jnp.einsum("bsf,fd->bsd", hm, shared["mlp"]["wo"],
+                         preferred_element_type=ACC).astype(h.dtype)
+    pad = max_len - k.shape[1]
+    k_pad = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v_pad = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return h2, (k_pad, v_pad)
+
+
+def shared_block_decode(shared, h, emb, cfg, positions, k_cache, v_cache, pos):
+    xin = jnp.concatenate([h, emb], axis=-1)
+    a = L.rms_norm(xin, shared["ln_attn"], cfg.norm_eps)
+    q, k, v = L.qkv_project(shared["attn"], a)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, pos, 0, 0))
+    o = decode_attention_dense(q, k_cache, v_cache, cache_len=pos + 1)
+    h2 = h + L.out_project(shared["attn"], o.astype(h.dtype), h.dtype)
+    m = L.rms_norm(jnp.concatenate([h2, emb], axis=-1), shared["ln_mlp"],
+                   cfg.norm_eps)
+    gate = jnp.einsum("bsd,df->bsf", m, shared["mlp"]["wi_gate"],
+                      preferred_element_type=ACC)
+    up = jnp.einsum("bsd,df->bsf", m, shared["mlp"]["wi_up"],
+                    preferred_element_type=ACC)
+    hm = (jax.nn.silu(gate) * up).astype(h.dtype)
+    h2 = h2 + jnp.einsum("bsf,fd->bsd", hm, shared["mlp"]["wo"],
+                         preferred_element_type=ACC).astype(h.dtype)
+    return h2, (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    emb = L.embed_tokens(params["embed"], tokens)
+    x = emb
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :].repeat(B, axis=0)
+
+    def group_body(h, group_blocks):
+        h = shared_block_train(params["shared"], h, emb, cfg, positions)
+
+        def mamba_body(hh, blk):
+            h2, _, _ = M2.block_apply(blk, hh, cfg)
+            return h2, None
+
+        h, _ = jax.lax.scan(mamba_body, h, group_blocks)
+        return h, None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+
+    if params.get("tail") is not None:
+        x = shared_block_train(params["shared"], x, emb, cfg, positions)
+
+        def mamba_body(hh, blk):
+            h2, _, _ = M2.block_apply(blk, hh, cfg)
+            return h2, None
+
+        tail_body = mamba_body
+        if cfg.remat:
+            tail_body = jax.checkpoint(mamba_body, prevent_cse=False)
+        x, _ = jax.lax.scan(tail_body, x, params["tail"])
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.unembed(x, params["embed"])
+
+
+def loss_fn(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    return L.cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:],
+                                batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
+            max_len: int) -> Tuple[jnp.ndarray, PyTree]:
+    emb = L.embed_tokens(params["embed"], tokens)
+    x = emb
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :].repeat(B, axis=0)
+
+    def group_body(h, group_blocks):
+        h, kv = shared_block_prefill(params["shared"], h, emb, cfg, positions,
+                                     max_len)
+
+        def mamba_body(hh, blk):
+            h2, conv_s, ssm_s = M2.block_apply(blk, hh, cfg)
+            return h2, (conv_s, ssm_s)
+
+        h, states = jax.lax.scan(mamba_body, h, group_blocks)
+        return h, (kv, states)
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    x, (kvs, group_states) = jax.lax.scan(group_body, x, params["groups"])
+
+    tail_state = None
+    tail_kv = None
+    if params.get("tail") is not None:
+        x, tail_kv = shared_block_prefill(params["shared"], x, emb, cfg,
+                                          positions, max_len)
+
+        def mamba_body(hh, blk):
+            h2, conv_s, ssm_s = M2.block_apply(blk, hh, cfg)
+            return h2, (conv_s, ssm_s)
+
+        x, tail_state = jax.lax.scan(mamba_body, x, params["tail"])
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.unembed(x[:, -1:], params["embed"])
+    cache = {
+        "kv": kvs,                    # (k [Gsites,...], v) stacked over sites
+        "states": group_states,       # (conv [G, g, ...], ssm [G, g, ...])
+        "tail_kv": tail_kv,
+        "tail_state": tail_state,
+        "length": jnp.asarray(S, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
+                cfg: ModelConfig) -> Tuple[jnp.ndarray, PyTree]:
+    emb = L.embed_tokens(params["embed"], token)
+    x = emb
+    B = x.shape[0]
+    pos = cache["length"]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+
+    def group_body(h, inp):
+        group_blocks, (kc, vc), (conv_s, ssm_s) = inp
+        h, (kc, vc) = shared_block_decode(params["shared"], h, emb, cfg,
+                                          positions, kc, vc, pos)
+
+        def mamba_body(hh, blk_state):
+            blk, cs, ss = blk_state
+            h2, cn, sn = M2.block_apply(blk, hh, cfg, conv_state=cs, ssm_state=ss)
+            return h2, (cn, sn)
+
+        h, (conv_n, ssm_n) = jax.lax.scan(mamba_body, h, (group_blocks, conv_s, ssm_s))
+        return h, ((kc, vc), (conv_n, ssm_n))
+
+    kvs = cache["kv"]
+    x, (new_kvs, new_states) = jax.lax.scan(
+        group_body, x, (params["groups"], kvs, cache["states"])
+    )
+
+    tail_kv, tail_state = cache.get("tail_kv"), cache.get("tail_state")
+    if params.get("tail") is not None:
+        x, tail_kv = shared_block_decode(params["shared"], x, emb, cfg,
+                                         positions, tail_kv[0], tail_kv[1], pos)
+
+        def mamba_body(hh, blk_state):
+            blk, cs, ss = blk_state
+            h2, cn, sn = M2.block_apply(blk, hh, cfg, conv_state=cs, ssm_state=ss)
+            return h2, (cn, sn)
+
+        x, tail_state = jax.lax.scan(mamba_body, x, (params["tail"],) + tuple(tail_state))
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.unembed(x, params["embed"])
+    return logits, {
+        "kv": new_kvs, "states": new_states,
+        "tail_kv": tail_kv, "tail_state": tail_state,
+        "length": pos + 1,
+    }

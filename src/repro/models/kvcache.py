@@ -1,0 +1,55 @@
+"""KV / SSM state caches for serving.
+
+Layouts:
+* attention KV:   {"k": [L, B, S_max, KV, D], "v": same, "length": scalar}
+* mamba2 state:   {"ssm": [L, B, H, P, N], "conv": [L, B, K-1, C], "length"}
+* zamba2 shared-attention sites get their own KV stack indexed by site.
+
+``length`` is an int32 scalar tracking the valid prefix (same for the whole
+batch in this engine; ragged batches live in serving/batching.py).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+PyTree = Dict[str, jnp.ndarray]
+
+
+def init_attn_cache(
+    n_layers: int, batch: int, max_len: int, n_kv: int, d_head: int,
+    dtype=jnp.bfloat16,
+) -> PyTree:
+    shape = (n_layers, batch, max_len, n_kv, d_head)
+    return {
+        "k": jnp.zeros(shape, dtype=dtype),
+        "v": jnp.zeros(shape, dtype=dtype),
+        "length": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def init_ssm_cache(
+    n_layers: int, batch: int, n_heads: int, head_dim: int, state: int,
+    conv_kernel: int, conv_channels: int, dtype=jnp.float32,
+) -> PyTree:
+    return {
+        "ssm": jnp.zeros((n_layers, batch, n_heads, head_dim, state), dtype=dtype),
+        "conv": jnp.zeros((n_layers, batch, conv_kernel - 1, conv_channels), dtype=dtype),
+        "length": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def update_layer_kv(cache: PyTree, layer: int, k_new, v_new, position) -> PyTree:
+    """Insert [B, S_new, KV, D] at sequence offset ``position`` of ``layer``."""
+    import jax.lax as lax
+
+    zeros = jnp.zeros((), jnp.int32)
+    idx = (jnp.asarray(layer, jnp.int32), zeros, jnp.asarray(position, jnp.int32),
+           zeros, zeros)
+    return {
+        **cache,
+        "k": lax.dynamic_update_slice(cache["k"], k_new[None].astype(cache["k"].dtype), idx),
+        "v": lax.dynamic_update_slice(cache["v"], v_new[None].astype(cache["v"].dtype), idx),
+    }

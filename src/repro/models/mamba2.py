@@ -1,0 +1,328 @@
+"""Mamba2 — SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD algorithm: the sequence splits into chunks of ``cfg.ssm_chunk``;
+within a chunk the recurrence is evaluated as a (masked, decay-weighted)
+matmul — MXU-friendly — and chunk-level states are carried by a short
+``lax.scan``.  This is exactly the decomposition the paper's Listing 1 uses,
+and it is the oracle for the ``ssd_scan`` Pallas kernel.
+
+Decode is the O(1) recurrent update on the [B, H, P, N] state.
+
+Sharding: heads (H) shard over the ``model`` axis; B/C groups are small and
+stay replicated; in/out projections shard like MLP weights.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+PyTree = Any
+ACC = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig) -> PyTree:
+    """Projections are kept per-component (z, x, B, C, dt) instead of one
+    fused in_proj: a fused output dim would shard across the component
+    boundaries on the ``model`` axis, forcing XLA to reshard at every split.
+    Separate weights let z/x (and the x-conv) shard head-aligned while the
+    small B/C/dt projections stay replicated — the TPU-native layout."""
+    d, di = cfg.d_model, cfg.d_inner
+    H, N, G, K = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.conv_kernel
+    ks = jax.random.split(key, 9)
+    return {
+        "ln": L.init_rms_norm(d),
+        "in_z": L.dense_init(ks[0], (d, di)),
+        "in_x": L.dense_init(ks[1], (d, di)),
+        "in_B": L.dense_init(ks[2], (d, G * N)),
+        "in_C": L.dense_init(ks[3], (d, G * N)),
+        "in_dt": L.dense_init(ks[4], (d, H)),
+        "conv_x_w": L.dense_init(ks[5], (K, di), in_axis_size=K),
+        "conv_x_b": jnp.zeros((di,), L.PARAM_DTYPE),
+        "conv_B_w": L.dense_init(ks[6], (K, G * N), in_axis_size=K),
+        "conv_B_b": jnp.zeros((G * N,), L.PARAM_DTYPE),
+        "conv_C_w": L.dense_init(ks[7], (K, G * N), in_axis_size=K),
+        "conv_C_b": jnp.zeros((G * N,), L.PARAM_DTYPE),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),   # softplus ≈ 0.12
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": L.init_rms_norm(di),
+        "out_proj": L.dense_init(ks[8], (di, d), in_axis_size=di),
+    }
+
+
+def init(key, cfg: ModelConfig) -> PyTree:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = [init_block(keys[i], cfg) for i in range(cfg.n_layers)]
+    return {
+        "embed": L.init_embedding(keys[-2], cfg.padded_vocab(), cfg.d_model),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "ln_f": L.init_rms_norm(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# pieces
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                state: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over [B, L, C]; returns (y, new_state[K-1])."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    L_ = x.shape[1]
+    y = sum(
+        xp[:, i : i + L_, :] * w[i].astype(ACC) for i in range(K)
+    ) + b.astype(ACC)
+    new_state = xp[:, L_ : L_ + K - 1, :] if K > 1 else xp[:, :0, :]
+    return jax.nn.silu(y).astype(x.dtype), new_state
+
+
+def ssd_chunked(
+    x: jnp.ndarray,     # [B, L, H, P]
+    dt: jnp.ndarray,    # [B, L, H]  (post-softplus)
+    A: jnp.ndarray,     # [H] (negative)
+    Bm: jnp.ndarray,    # [B, L, G, N]
+    Cm: jnp.ndarray,    # [B, L, G, N]
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # [B, H, P, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunk-parallel SSD scan.  Returns (y [B,L,H,P], final_state)."""
+    B_, L_, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    pad = (-L_) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L_ + pad
+    nc = Lp // chunk
+    xc = x.reshape(B_, nc, chunk, H, P).astype(ACC)
+    dtc = dt.reshape(B_, nc, chunk, H).astype(ACC)
+    Bc = Bm.reshape(B_, nc, chunk, G, N).astype(ACC)
+    Cc = Cm.reshape(B_, nc, chunk, G, N).astype(ACC)
+
+    dA = dtc * A.astype(ACC)                      # [B,nc,Q,H] (≤0)
+    l = jnp.cumsum(dA, axis=2)                    # within-chunk log-decay
+    l_last = l[:, :, -1]                          # [B,nc,H]
+
+    # Phase 1 (checkpointed map over chunks): per-chunk states.  Keeping the
+    # O(Q²) decay/CB tensors inside a rematerialized chunk body bounds
+    # backward residuals to ONE chunk instead of all of them.
+    def chunk_state(args):
+        x1, dt1, B1, l1, ll1 = args               # [B,Q,H,P], [B,Q,H], …
+        w1 = jnp.exp(jnp.clip(ll1[:, None] - l1, -60.0, 0.0)) * dt1
+        Bh1 = jnp.repeat(B1, rep, axis=2)         # [B,Q,H,N]
+        return jnp.einsum("bsh,bshm,bshp->bhpm", w1, Bh1, x1,
+                          preferred_element_type=ACC)
+
+    chunk_state = jax.checkpoint(chunk_state, prevent_cse=False)
+    S_chunk = jax.lax.map(
+        chunk_state,
+        (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+         Bc.transpose(1, 0, 2, 3, 4), l.transpose(1, 0, 2, 3),
+         l_last.transpose(1, 0, 2)),
+    )                                             # [nc,B,H,P,N]
+
+    # Phase 2: inter-chunk recurrence (tiny state carry).
+    def scan_body(S_prev, inp):
+        S_c, decay_c = inp                        # [B,H,P,N], [B,H]
+        S_next = S_prev * jnp.exp(jnp.clip(decay_c, -60.0, 0.0))[..., None, None] + S_c
+        return S_next, S_prev
+
+    S0 = (jnp.zeros((B_, H, P, N), ACC) if init_state is None
+          else init_state.astype(ACC))
+    S_final, S_prevs = jax.lax.scan(
+        scan_body, S0, (S_chunk, l_last.transpose(1, 0, 2))
+    )                                             # S_prevs [nc,B,H,P,N]
+
+    # Phase 3 (checkpointed map over chunks): outputs.
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_output(args):
+        x1, dt1, B1, C1, l1, Sp1 = args
+        CB = jnp.einsum("btgm,bsgm->bgts", C1, B1,
+                        preferred_element_type=ACC)
+        CBh = jnp.repeat(CB, rep, axis=1)         # [B,H,Q,Q]
+        lt = l1.transpose(0, 2, 1)                # [B,H,Q]
+        decay = jnp.exp(jnp.clip(lt[..., :, None] - lt[..., None, :],
+                                 -60.0, 0.0))
+        M = jnp.where(causal, CBh * decay, 0.0)
+        xdt = x1 * dt1[..., None]
+        y_in = jnp.einsum("bhts,bshp->bthp", M, xdt,
+                          preferred_element_type=ACC)
+        Ch1 = jnp.repeat(C1, rep, axis=2)         # [B,Q,H,N]
+        y_x = jnp.einsum("bthm,bhpm->bthp", Ch1, Sp1,
+                         preferred_element_type=ACC)
+        y_x = y_x * jnp.exp(jnp.clip(l1, -60.0, 0.0))[..., None]
+        return y_in + y_x
+
+    chunk_output = jax.checkpoint(chunk_output, prevent_cse=False)
+    ys = jax.lax.map(
+        chunk_output,
+        (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+         Bc.transpose(1, 0, 2, 3, 4), Cc.transpose(1, 0, 2, 3, 4),
+         l.transpose(1, 0, 2, 3), S_prevs),
+    )                                             # [nc,B,Q,H,P]
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, Lp, H, P)[:, :L_]
+    return y, S_final
+
+
+def ssd_decode(
+    x: jnp.ndarray,     # [B, 1, H, P]
+    dt: jnp.ndarray,    # [B, 1, H]
+    A: jnp.ndarray,     # [H]
+    Bm: jnp.ndarray,    # [B, 1, G, N]
+    Cm: jnp.ndarray,    # [B, 1, G, N]
+    state: jnp.ndarray,  # [B, H, P, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent update: S ← exp(dt·A)·S + dt·B⊗x;  y = C·S."""
+    H = x.shape[2]
+    G = Bm.shape[2]
+    rep = H // G
+    xf = x[:, 0].astype(ACC)                       # [B,H,P]
+    dtf = dt[:, 0].astype(ACC)                     # [B,H]
+    Bh = jnp.repeat(Bm[:, 0], rep, axis=1).astype(ACC)   # [B,H,N]
+    Ch = jnp.repeat(Cm[:, 0], rep, axis=1).astype(ACC)   # [B,H,N]
+    decay = jnp.exp(jnp.clip(dtf * A.astype(ACC), -60.0, 0.0))
+    S_new = state.astype(ACC) * decay[..., None, None] + jnp.einsum(
+        "bh,bhm,bhp->bhpm", dtf, Bh, xf, preferred_element_type=ACC
+    )
+    y = jnp.einsum("bhm,bhpm->bhp", Ch, S_new, preferred_element_type=ACC)
+    return y[:, None], S_new
+
+
+def block_apply(
+    blk: PyTree, x: jnp.ndarray, cfg: ModelConfig,
+    conv_state: Optional[jnp.ndarray] = None,
+    ssm_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full mamba2 block on [B, L, d].  Returns (out, conv_states, ssm_state).
+
+    ``conv_state``: None (prefill from scratch) or dict with "x"/"B"/"C"
+    tails of the three causal convolutions.
+    """
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    di = cfg.d_inner
+    B_, L_, _ = x.shape
+    h = L.rms_norm(x, blk["ln"], cfg.norm_eps)
+
+    def proj(w):
+        return jnp.einsum("bld,dk->blk", h, w,
+                          preferred_element_type=ACC).astype(h.dtype)
+
+    z = proj(blk["in_z"])
+    xr = proj(blk["in_x"])
+    Br = proj(blk["in_B"])
+    Cr = proj(blk["in_C"])
+    dt = proj(blk["in_dt"])
+    cs = conv_state or {}
+    xs, conv_x = causal_conv(xr, blk["conv_x_w"], blk["conv_x_b"], cs.get("x"))
+    Bm, conv_B = causal_conv(Br, blk["conv_B_w"], blk["conv_B_b"], cs.get("B"))
+    Cm, conv_C = causal_conv(Cr, blk["conv_C_w"], blk["conv_C_b"], cs.get("C"))
+    new_conv = {"x": conv_x, "B": conv_B, "C": conv_C}
+    xs = xs.reshape(B_, L_, H, P)
+    Bm = Bm.reshape(B_, L_, G, N)
+    Cm = Cm.reshape(B_, L_, G, N)
+    dt_ = jax.nn.softplus(dt.astype(ACC) + blk["dt_bias"])
+    A = -jnp.exp(blk["A_log"])
+    if L_ == 1 and ssm_state is not None:
+        y, S = ssd_decode(xs, dt_, A, Bm, Cm, ssm_state)
+    else:
+        y, S = ssd_chunked(xs, dt_, A, Bm, Cm, cfg.ssm_chunk, init_state=ssm_state)
+    y = y + xs.astype(ACC) * blk["D"][None, None, :, None]
+    y = y.reshape(B_, L_, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(ACC)).astype(y.dtype), blk["norm"],
+                   cfg.norm_eps)
+    out = jnp.einsum("bld,dk->blk", y, blk["out_proj"],
+                     preferred_element_type=L.TP_PSUM_DTYPE).astype(x.dtype)
+    return x + out, new_conv, S
+
+
+def decode_block(
+    blk: PyTree, x: jnp.ndarray, cfg: ModelConfig,
+    conv_state: jnp.ndarray, ssm_state: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent step on [B, 1, d]."""
+    return block_apply(blk, x, cfg, conv_state=conv_state, ssm_state=ssm_state)
+
+
+# ---------------------------------------------------------------------------
+# model-level
+# ---------------------------------------------------------------------------
+
+
+def forward(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = L.embed_tokens(params["embed"], tokens)
+
+    def body(h, blk):
+        h2, _, _ = block_apply(blk, h, cfg)
+        return h2, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.unembed(x, params["embed"])
+
+
+def loss_fn(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    return L.cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:],
+                                batch.get("mask"))
+
+
+def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
+            max_len: int = 0) -> Tuple[jnp.ndarray, PyTree]:
+    """SSM 'cache' is O(1): conv tail + state per layer (max_len unused)."""
+    x = L.embed_tokens(params["embed"], tokens)
+
+    def body(h, blk):
+        h2, conv_s, ssm_s = block_apply(blk, h, cfg)
+        return h2, (conv_s, ssm_s)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (conv_states, ssm_states) = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.unembed(x[:, -1:], params["embed"])
+    cache = {
+        "conv": conv_states, "ssm": ssm_states,
+        "length": jnp.asarray(tokens.shape[1], jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
+                cfg: ModelConfig) -> Tuple[jnp.ndarray, PyTree]:
+    x = L.embed_tokens(params["embed"], token)
+
+    def body(h, inp):
+        blk, conv_s, ssm_s = inp
+        h2, conv_n, ssm_n = decode_block(blk, h, cfg, conv_s, ssm_s)
+        return h2, (conv_n, ssm_n)
+
+    x, (conv_states, ssm_states) = jax.lax.scan(
+        body, x, (params["blocks"], cache["conv"], cache["ssm"])
+    )
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.unembed(x, params["embed"])
+    return logits, {
+        "conv": conv_states, "ssm": ssm_states, "length": cache["length"] + 1,
+    }

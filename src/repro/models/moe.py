@@ -1,0 +1,453 @@
+"""Mixture-of-Experts decoder (kimi-k2-1t, deepseek-moe-16b).
+
+Routing: top-k with normalized gate weights over the selected experts
+(DeepSeek-style), optional shared experts always active, and a dense first
+layer (``cfg.first_dense_layers``).
+
+Dispatch is **grouped sort-based with static capacity** — the TPU-native
+adaptation of the paper's send-only-needed-rows insight (DESIGN.md §3):
+
+* tokens are split into ``dp_groups`` groups aligned with the data-parallel
+  sharding, so the sort that ranks tokens within each expert never crosses a
+  shard boundary;
+* each expert accepts at most ``C = ceil(T_group·k/E · capacity_factor)``
+  tokens per group (overflow drops, standard capacity-based MoE);
+* expert compute is a dense einsum over the [E, C, d] dispatch buffer, which
+  shards cleanly over the ``model`` (expert) axis; the gather/scatter between
+  token space and expert space is where XLA inserts the all-to-all — the
+  collective analogue of the FSI point-to-point exchange.
+
+Aux: load-balance loss (Switch-style) returned in metrics.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import (
+    chunked_causal_attention,
+    decode_attention_dense,
+)
+from repro.models import transformer as TF
+
+PyTree = Any
+ACC = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_moe_ffn(key, cfg: ModelConfig) -> PyTree:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(ks[0], (d, E), dtype=jnp.float32),
+        "w_gate": L.dense_init(ks[1], (E, d, f)),
+        "w_up": L.dense_init(ks[2], (E, d, f)),
+        "w_down": L.dense_init(ks[3], (E, f, d), in_axis_size=f),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], d, f * cfg.n_shared_experts)
+    return p
+
+
+MOE_AXES = {
+    "router": ("embed", "experts_unsharded"),
+    "w_gate": ("experts", "embed", "expert_ffn"),
+    "w_up": ("experts", "embed", "expert_ffn"),
+    "w_down": ("experts", "expert_ffn", "embed"),
+}
+
+
+def init_block(key, cfg: ModelConfig, dense: bool) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    blk = {
+        "ln_attn": L.init_rms_norm(cfg.d_model),
+        "attn": L.init_attention(
+            k1, cfg.d_model, cfg.eff_heads, cfg.eff_kv_heads, cfg.d_head,
+            qkv_bias=cfg.qkv_bias,
+        ),
+        "ln_mlp": L.init_rms_norm(cfg.d_model),
+    }
+    if dense:
+        blk["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff)
+    else:
+        blk["moe"] = init_moe_ffn(k2, cfg)
+    return blk
+
+
+def init(key, cfg: ModelConfig) -> PyTree:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    dense_blocks = [
+        init_block(keys[i], cfg, dense=True) for i in range(cfg.first_dense_layers)
+    ]
+    moe_blocks = [
+        init_block(keys[i], cfg, dense=False)
+        for i in range(cfg.first_dense_layers, cfg.n_layers)
+    ]
+    params = {
+        "embed": L.init_embedding(keys[-2], cfg.padded_vocab(), cfg.d_model),
+        "dense_blocks": (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *dense_blocks)
+            if dense_blocks else None
+        ),
+        "moe_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *moe_blocks),
+        "ln_f": L.init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.init_embedding(keys[-1], cfg.padded_vocab(), cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# routing + dispatch
+# ---------------------------------------------------------------------------
+
+
+def route_topk(logits: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[T, E] → (weights [T, k] normalized, idx [T, k])."""
+    vals, idx = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(vals.astype(ACC), axis=-1)
+    return w, idx
+
+
+def _dispatch_tables(e_flat: jnp.ndarray, E: int, C: int):
+    """Sort-based capacity dispatch within one token group.
+
+    e_flat: [A] expert id per assignment (A = T_group·k).
+    Returns (slot_token [E, C] indices into A, slot_valid [E, C]).
+    """
+    A = e_flat.shape[0]
+    order = jnp.argsort(e_flat)                      # stable-ish grouping
+    sorted_e = e_flat[order]
+    # rank of each sorted entry within its expert segment
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank = jnp.arange(A) - seg_start[sorted_e]
+    keep = rank < C
+    # scatter sorted assignment positions into the [E, C] table; dropped
+    # entries aim at column C, which is out of bounds → mode="drop"
+    table = jnp.full((E, C), A, dtype=jnp.int32)     # A = sentinel (invalid)
+    table = table.at[sorted_e, jnp.where(keep, rank, C)].set(
+        order.astype(jnp.int32), mode="drop"
+    )
+    valid = table < A
+    return jnp.where(valid, table, 0), valid
+
+
+def moe_ffn(
+    p: PyTree, x: jnp.ndarray, cfg: ModelConfig, dp_groups: int = 1,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x [B, S, d] → (out [B, S, d], metrics)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    xf = x.reshape(B * S, d)
+    T = B * S
+    dp_groups = max(1, min(dp_groups, T))
+    while T % dp_groups:
+        dp_groups -= 1
+    Tg = T // dp_groups
+    C = max(1, int(-(-Tg * k // E) * cfg.moe_capacity_factor))
+
+    logits = jnp.einsum("td,de->te", xf.astype(ACC), p["router"],
+                        preferred_element_type=ACC)
+    w, idx = route_topk(logits, k)                   # [T,k]
+
+    # group-local dispatch (vmapped over dp groups — sort never crosses the
+    # data-parallel shard boundary)
+    idx_g = idx.reshape(dp_groups, Tg * k)
+    tables, valids = jax.vmap(lambda e: _dispatch_tables(e, E, C))(idx_g)
+    # translate group-local assignment position → global token id + gate w
+    w_g = w.reshape(dp_groups, Tg * k)
+    token_of_assign = (
+        jnp.arange(dp_groups * Tg * k, dtype=jnp.int32).reshape(dp_groups, Tg * k)
+        // k
+    )
+    slot_token = jnp.take_along_axis(
+        token_of_assign, tables.reshape(dp_groups, E * C), axis=1
+    ).reshape(dp_groups, E, C)
+    slot_w = jnp.take_along_axis(
+        w_g, tables.reshape(dp_groups, E * C), axis=1
+    ).reshape(dp_groups, E, C)
+    slot_w = jnp.where(valids, slot_w, 0.0)
+
+    # gather tokens → [E, G·C, d] so the expert einsum shards over E; the
+    # token→expert gather (and the scatter back) is where the partitioner
+    # emits the all-to-all — the collective analogue of the FSI exchange
+    xe = xf[slot_token.transpose(1, 0, 2).reshape(E, dp_groups * C)]
+    xe = L.constrain(xe, "model", None, None)
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"], preferred_element_type=ACC)
+    up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"], preferred_element_type=ACC)
+    h = L.constrain((jax.nn.silu(gate) * up).astype(x.dtype), "model", None, None)
+    oe = jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+                    preferred_element_type=L.TP_PSUM_DTYPE)
+    oe = L.constrain(oe, "model", None, None)
+
+    wts = slot_w.transpose(1, 0, 2).reshape(E, dp_groups * C)
+    out = jnp.zeros((T, d), ACC).at[
+        slot_token.transpose(1, 0, 2).reshape(E, dp_groups * C)
+    ].add(oe * wts[..., None])
+    out = L.constrain(out, "dp", None)
+
+    if cfg.n_shared_experts:
+        out = out + L.mlp(p["shared"], x).reshape(T, d).astype(ACC)
+
+    # Switch-style load-balance loss (scatter-add, no [T,k,E] one-hot)
+    probs = jax.nn.softmax(logits, axis=-1)
+    counts = jnp.zeros((E,), ACC).at[idx.reshape(-1)].add(1.0)
+    frac_tokens = counts / (T * k)
+    frac_probs = probs.mean(axis=0)
+    lb_loss = E * jnp.sum(frac_tokens * frac_probs)
+    drop_frac = 1.0 - valids.mean()
+    return out.reshape(B, S, d).astype(x.dtype), {
+        "lb_loss": lb_loss, "drop_frac": drop_frac,
+    }
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert-parallel dispatch (§Perf structural optimization)
+# ---------------------------------------------------------------------------
+
+# Opt-in: EXPERIMENTS.md §Perf B5 showed XLA's propagation cannot infer a
+# comm-minimal expert schedule from pjit specs.  This variant states it
+# explicitly with shard_map: activations are replicated over the model axis
+# (as TP already leaves them), every rank routes identically, gathers ONLY
+# its local experts' tokens (a pure-local gather — the paper's "send only
+# the rows the owner needs"), computes, and a single psum of the [T, d]
+# output is the only cross-device traffic — one all-reduce per MoE layer,
+# same as a dense TP block.
+MOE_EP_SHARDMAP = False
+
+
+def set_moe_ep_shardmap(on: bool) -> None:
+    global MOE_EP_SHARDMAP
+    MOE_EP_SHARDMAP = on
+
+
+def _moe_ffn_local(p_local, x, cfg: ModelConfig, e0, E_local: int):
+    """Route against all E experts; evaluate only experts [e0, e0+E_local)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    xf = x.reshape(B * S, d)
+    T = B * S
+    C = max(1, int(-(-T * k // E) * cfg.moe_capacity_factor))
+
+    logits = jnp.einsum("td,de->te", xf.astype(ACC), p_local["router"],
+                        preferred_element_type=ACC)
+    w, idx = route_topk(logits, k)
+
+    # keep only assignments owned by this rank; foreign ones → sentinel
+    e_rel = idx.reshape(-1) - e0
+    mine = (e_rel >= 0) & (e_rel < E_local)
+    e_flat = jnp.where(mine, e_rel, E_local).astype(jnp.int32)
+    table, valid = _dispatch_tables(e_flat, E_local + 1, C)
+    table, valid = table[:E_local], valid[:E_local]
+
+    token_of_assign = jnp.arange(T * k, dtype=jnp.int32) // k
+    slot_token = jnp.where(valid, token_of_assign[table], 0)
+    slot_w = jnp.where(valid, w.reshape(-1)[table], 0.0)
+
+    xe = xf[slot_token]                              # local gather only
+    gate = jnp.einsum("ecd,edf->ecf", xe, p_local["w_gate"],
+                      preferred_element_type=ACC)
+    up = jnp.einsum("ecd,edf->ecf", xe, p_local["w_up"],
+                    preferred_element_type=ACC)
+    h = (jax.nn.silu(gate) * up).astype(x.dtype)
+    oe = jnp.einsum("ecf,efd->ecd", h, p_local["w_down"],
+                    preferred_element_type=ACC)
+    out = jnp.zeros((T, d), ACC).at[slot_token].add(oe * slot_w[..., None])
+
+    counts = jnp.zeros((E,), ACC).at[idx.reshape(-1)].add(1.0)
+    lb = E * jnp.sum((counts / (T * k)) * jax.nn.softmax(logits, -1).mean(0))
+    return out.reshape(B, S, d), lb
+
+
+def moe_ffn_shardmap(p: PyTree, x: jnp.ndarray, cfg: ModelConfig):
+    """Explicit EP schedule via shard_map (requires an active shard ctx)."""
+    from jax.sharding import PartitionSpec as P
+
+    ctx = L.shard_ctx()
+    mesh, dp, model_axis = ctx["mesh"], ctx["dp"], ctx["model"]
+    msize = mesh.shape[model_axis]
+    E_local = cfg.n_experts // msize
+    dp_spec = tuple(dp) if dp else None
+
+    def body(x_loc, router, w_gate, w_up, w_down):
+        e0 = jax.lax.axis_index(model_axis) * E_local
+        out, lb = _moe_ffn_local(
+            {"router": router, "w_gate": w_gate, "w_up": w_up,
+             "w_down": w_down},
+            x_loc, cfg, e0, E_local,
+        )
+        out = jax.lax.psum(out.astype(ACC), model_axis)
+        return out.astype(x_loc.dtype), lb
+
+    out, lb = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp_spec, None, None), P(), P(model_axis, None, None),
+                  P(model_axis, None, None), P(model_axis, None, None)),
+        out_specs=(P(dp_spec, None, None), P()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+    if cfg.n_shared_experts:  # shared experts stay on the dense TP path
+        out = out + L.mlp(p["shared"], x)
+    return out, {"lb_loss": lb, "drop_frac": jnp.zeros(())}
+
+
+def moe_ffn_dispatch(p, x, cfg: ModelConfig, dp_groups: int = 1):
+    ctx = L.shard_ctx()
+    if (MOE_EP_SHARDMAP and ctx["mesh"] is not None and ctx["model"]
+            and cfg.n_experts % ctx["mesh"].shape[ctx["model"]] == 0):
+        return moe_ffn_shardmap(p, x, cfg)
+    return moe_ffn(p, x, cfg, dp_groups)
+
+
+# ---------------------------------------------------------------------------
+# blocks / forward / loss
+# ---------------------------------------------------------------------------
+
+
+def block_train(block: PyTree, x, cfg: ModelConfig, positions, dp_groups: int):
+    x = TF._attn_train(block, x, cfg, positions)
+    h = L.rms_norm(x, block["ln_mlp"], cfg.norm_eps)
+    if "mlp" in block and block.get("mlp") is not None:
+        return x + L.mlp(block["mlp"], h), jnp.zeros((), ACC)
+    out, metrics = moe_ffn_dispatch(block["moe"], h, cfg, dp_groups)
+    return x + out, metrics["lb_loss"]
+
+
+def forward(
+    params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
+    dp_groups: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = L.embed_tokens(params["embed"], tokens)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :].repeat(B, axis=0)
+    lb_total = jnp.zeros((), ACC)
+
+    if params.get("dense_blocks") is not None:
+        def dense_body(h, blk):
+            h2, _ = block_train(blk, h, cfg, positions, dp_groups)
+            return h2, None
+        if cfg.remat:
+            dense_body = jax.checkpoint(dense_body, prevent_cse=False)
+        x, _ = jax.lax.scan(dense_body, x, params["dense_blocks"])
+
+    def moe_body(carry, blk):
+        h, lb = carry
+        h2, lb2 = block_train(blk, h, cfg, positions, dp_groups)
+        return (h2, lb + lb2), None
+
+    if cfg.remat:
+        moe_body = jax.checkpoint(moe_body, prevent_cse=False)
+    (x, lb_total), _ = jax.lax.scan(moe_body, (x, lb_total), params["moe_blocks"])
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(x, table), lb_total
+
+
+def loss_fn(params: PyTree, batch, cfg: ModelConfig, dp_groups: int = 1,
+            lb_coeff: float = 0.01) -> jnp.ndarray:
+    logits, lb = forward(params, batch["tokens"], cfg, dp_groups)
+    ce = L.cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:],
+                              batch.get("mask"))
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    return ce + lb_coeff * lb / max(1, n_moe)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def _stacked_blocks(params):
+    """(blocks pytree, n) iterator helper over dense+moe stacks."""
+    out = []
+    if params.get("dense_blocks") is not None:
+        out.append(params["dense_blocks"])
+    out.append(params["moe_blocks"])
+    return out
+
+
+def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
+            max_len: int, dp_groups: int = 1) -> Tuple[jnp.ndarray, PyTree]:
+    x = L.embed_tokens(params["embed"], tokens)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :].repeat(B, axis=0)
+    pad = max_len - S
+    caches = []
+
+    for blocks in _stacked_blocks(params):
+        def body(h, blk):
+            hn = L.rms_norm(h, blk["ln_attn"], cfg.norm_eps)
+            q, k, v = L.qkv_project(blk["attn"], hn)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            o = chunked_causal_attention(q, k, v)
+            h = h + L.out_project(blk["attn"], o, h.dtype)
+            hm = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
+            if blk.get("mlp") is not None:
+                h = h + L.mlp(blk["mlp"], hm)
+            else:
+                out, _ = moe_ffn_dispatch(blk["moe"], hm, cfg, dp_groups)
+                h = h + out
+            k_pad = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_pad = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return h, (k_pad, v_pad)
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, (ks, vs) = jax.lax.scan(body, x, blocks)
+        caches.append({"k": ks, "v": vs})
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(x[:, -1:], table)
+    cache = {"stacks": caches, "length": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
+                cfg: ModelConfig, dp_groups: int = 1) -> Tuple[jnp.ndarray, PyTree]:
+    x = L.embed_tokens(params["embed"], token)
+    B = x.shape[0]
+    pos = cache["length"]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    new_stacks = []
+
+    for blocks, kv in zip(_stacked_blocks(params), cache["stacks"]):
+        def body(h, inp):
+            blk, k_cache, v_cache = inp
+            hn = L.rms_norm(h, blk["ln_attn"], cfg.norm_eps)
+            q, k, v = L.qkv_project(blk["attn"], hn)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+            o = decode_attention_dense(q, k_cache, v_cache, cache_len=pos + 1)
+            h = h + L.out_project(blk["attn"], o.astype(h.dtype), h.dtype)
+            hm = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
+            if blk.get("mlp") is not None:
+                h = h + L.mlp(blk["mlp"], hm)
+            else:
+                out, _ = moe_ffn_dispatch(blk["moe"], hm, cfg, dp_groups)
+                h = h + out
+            return h, (k_cache, v_cache)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (blocks, kv["k"], kv["v"]))
+        new_stacks.append({"k": ks, "v": vs})
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(x, table)
+    return logits, {"stacks": new_stacks, "length": pos + 1}

@@ -1,0 +1,67 @@
+"""Batched serving engine: prefill + decode loop over any assigned arch.
+
+The engine mirrors the paper's batch-inference posture (§V-B: requests are
+buffered and batched upstream; FSD processes the batch): prompts are padded
+to a bucket, prefilled once, then decoded step-by-step with the KV/SSM cache.
+Greedy sampling keeps tests deterministic.
+
+``router.py`` decides the execution configuration (the paper's
+Serial/Queue/Object choice, mapped to TPU slice sizing) before the engine
+runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_model
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray           # [B, max_new]
+    prefill_logits: np.ndarray   # [B, vocab]
+    steps: int
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Optional[PyTree] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params if params is not None else self.model.init(
+            jax.random.key(seed))
+        self._prefill = jax.jit(self.model.prefill, static_argnums=(2,))
+        self._decode = jax.jit(self.model.decode_step)
+
+    def generate(
+        self,
+        prompts: np.ndarray,            # [B, S_prompt] int32
+        max_new_tokens: int = 8,
+        extra: Optional[Dict[str, np.ndarray]] = None,
+    ) -> GenerationResult:
+        B, S = prompts.shape
+        max_len = S + max_new_tokens + (self.cfg.frontend_tokens or 0)
+        batch: Dict[str, Any] = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extra:
+            batch.update({k: jnp.asarray(v) for k, v in extra.items()})
+        logits, cache = self._prefill(self.params, batch, max_len)
+        out_tokens = []
+        token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        for _ in range(max_new_tokens):
+            out_tokens.append(np.asarray(token)[:, 0])
+            logits, cache = self._decode(self.params, token, cache)
+            token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return GenerationResult(
+            tokens=np.stack(out_tokens, axis=1),
+            prefill_logits=np.asarray(logits[:, 0]),
+            steps=max_new_tokens,
+        )

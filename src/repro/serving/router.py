@@ -1,0 +1,70 @@
+"""Cost-model-driven execution routing (paper §IV-C made executable).
+
+Given a request profile (model bytes, expected exchange volume, latency
+priority) the router picks:
+
+* on the serverless substrate: Serial vs FSD-Inf-Queue vs FSD-Inf-Object and
+  the worker count P — directly via ``core.cost_model.recommend_configuration``;
+* on the TPU substrate: the slice size (how many chips to dedicate) by the
+  same logic transposed to time-cost — smallest slice whose HBM fits the
+  model + cache with the latency target met, preferring fewer chips (the
+  'Serial' analogue) until memory or latency forces scale-out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.cost_model import TPU_V5E, recommend_configuration
+
+Channel = Literal["serial", "queue", "object"]
+
+
+@dataclasses.dataclass
+class ServerlessRoute:
+    channel: Channel
+    workers: int
+
+
+@dataclasses.dataclass
+class TpuRoute:
+    chips: int
+    reason: str
+
+
+def route_serverless(model_bytes: int, per_layer_exchange_bytes: float,
+                     n_layers: int, memory_mb: int = 4000) -> ServerlessRoute:
+    ch, p, _ = recommend_configuration(
+        model_bytes, per_layer_exchange_bytes, n_layers,
+        memory_mb_per_worker=memory_mb,
+    )
+    return ServerlessRoute(channel=ch, workers=p)
+
+
+def route_tpu(cfg: ModelConfig, shape: ShapeConfig,
+              bytes_per_param: float = 2.0,
+              target_step_latency_s: float = 0.1) -> TpuRoute:
+    params_b = cfg.param_count() * bytes_per_param
+    cache_b = 0.0
+    if shape.kind == "decode":
+        cache_b = (2 * (cfg.n_layers + cfg.n_encoder_layers)
+                   * shape.global_batch * shape.seq_len
+                   * cfg.eff_kv_heads * cfg.d_head * 2.0)
+        if cfg.family == "ssm":
+            cache_b = (cfg.n_layers * shape.global_batch * cfg.ssm_heads
+                       * cfg.ssm_head_dim * cfg.ssm_state * 4.0)
+    flops = 2.0 * cfg.active_param_count() * max(1, shape.tokens
+                                                 if shape.kind != "decode"
+                                                 else shape.global_batch)
+    chips = 1
+    for candidate in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512):
+        chips = candidate
+        fits = (params_b + cache_b) / candidate <= 0.85 * TPU_V5E.hbm_bytes
+        fast = flops / (candidate * TPU_V5E.peak_bf16_flops) <= target_step_latency_s
+        if fits and fast:
+            return TpuRoute(chips=candidate,
+                            reason=f"fits at {candidate} chips "
+                                   f"({(params_b + cache_b)/candidate/1e9:.1f}GB/chip)")
+    return TpuRoute(chips=chips, reason="requires the full 512-chip mesh")

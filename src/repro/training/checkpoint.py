@@ -1,0 +1,197 @@
+"""Sharded, async, integrity-checked checkpointing.
+
+Layout: ``<dir>/step_<N>/`` with one ``.npy`` per pytree leaf (path-encoded
+file names) plus ``manifest.json`` holding the tree structure, shapes,
+dtypes, per-leaf CRC32s, the step and a config fingerprint.
+
+Key properties for the fault-tolerance story (DESIGN.md §6):
+
+* **restart** — ``restore`` rebuilds the exact pytree; together with the
+  step-keyed data pipeline, training resumes bit-identically (tested);
+* **elastic resharding** — restore takes a ``shardings`` pytree, so a
+  checkpoint written on mesh A loads onto mesh B (device_put does the
+  resharding);
+* **async** — ``save_async`` snapshots to host memory synchronously (cheap)
+  and writes files on a background thread, overlapping IO with the next
+  training steps;
+* **integrity** — CRC32 per leaf, verified on restore.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+_SEP = "__"
+
+# numpy can't serialize ml_dtypes custom dtypes — store a same-width integer
+# view and record the logical dtype in the manifest
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _to_saveable(arr: np.ndarray):
+    name = str(arr.dtype)
+    if name in _VIEW_AS:
+        return arr.view(_VIEW_AS[name]), name
+    return arr, name
+
+
+def _from_saved(arr: np.ndarray, logical_dtype: str) -> np.ndarray:
+    if logical_dtype in _VIEW_AS:
+        return arr.view(getattr(ml_dtypes, logical_dtype))
+    return arr
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        keys = []
+        for e in path:
+            if isinstance(e, jax.tree_util.DictKey):
+                keys.append(str(e.key))
+            elif isinstance(e, jax.tree_util.SequenceKey):
+                keys.append(str(e.idx))
+            else:
+                keys.append(str(e))
+        flat[_SEP.join(keys)] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree, meta: Optional[dict] = None) -> str:
+    """Synchronous save; returns the step directory."""
+    out = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = out + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {"step": step, "meta": meta or {}, "leaves": {}}
+    for name, arr in flat.items():
+        fname = f"{zlib.crc32(name.encode()):08x}.npy"
+        saveable, logical = _to_saveable(arr)
+        np.save(os.path.join(tmp, fname), saveable)
+        manifest["leaves"][name] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": logical,
+            "crc32": zlib.crc32(np.ascontiguousarray(saveable).tobytes()),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(out):
+        shutil.rmtree(out)
+    os.replace(tmp, out)  # atomic publish
+    return out
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host then write on a worker thread."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending = None
+
+    def save_async(self, step: int, tree: PyTree, meta: Optional[dict] = None):
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+        self._pending = self._pool.submit(self._write, step, host_tree, meta)
+
+    def _write(self, step, host_tree, meta):
+        path = save(self.ckpt_dir, step, host_tree, meta)
+        self._gc()
+        return path
+
+    def _gc(self):
+        steps = sorted(latest_steps(self.ckpt_dir))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+
+def latest_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def restore(
+    ckpt_dir: str,
+    tree_like: PyTree,
+    step: Optional[int] = None,
+    shardings: Optional[PyTree] = None,
+    verify: bool = True,
+) -> tuple[PyTree, int]:
+    """Load a checkpoint into the structure of ``tree_like``.
+
+    ``shardings`` (a NamedSharding pytree for a possibly *different* mesh)
+    reshards on load — the elastic-scaling path.
+    """
+    steps = latest_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    step = steps[-1] if step is None else step
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat_like = _flatten(tree_like)
+    missing = set(flat_like) - set(manifest["leaves"])
+    if missing:
+        raise ValueError(f"checkpoint missing leaves: {sorted(missing)[:5]} …")
+
+    arrays: Dict[str, np.ndarray] = {}
+    for name in flat_like:
+        entry = manifest["leaves"][name]
+        arr = np.load(os.path.join(src, entry["file"]))
+        if verify:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != entry["crc32"]:
+                raise IOError(f"CRC mismatch for {name} in {src}")
+        arrays[name] = _from_saved(arr, entry["dtype"])
+
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: hasattr(x, "device_set") or x is None
+        )[0]
+    out_leaves = []
+    for i, (path, like) in enumerate(leaves_paths):
+        keys = []
+        for e in path:
+            if isinstance(e, jax.tree_util.DictKey):
+                keys.append(str(e.key))
+            elif isinstance(e, jax.tree_util.SequenceKey):
+                keys.append(str(e.idx))
+            else:
+                keys.append(str(e))
+        arr = arrays[_SEP.join(keys)]
+        if shard_flat is not None and shard_flat[i] is not None:
+            out_leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            out_leaves.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), step

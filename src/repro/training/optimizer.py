@@ -1,0 +1,237 @@
+"""Optimizers + LR schedules, pure JAX.
+
+* AdamW — fp32 moments, decoupled weight decay, global-norm clipping.
+* Adafactor — factored second moments (no first moment): the 1T-param MoE's
+  optimizer states must fit in HBM alongside bf16 params+grads (DESIGN.md §6).
+* Schedules: linear-warmup cosine, and WSD (warmup-stable-decay) for
+  minicpm [arXiv:2404.06395].
+
+Each optimizer is an (init, update) pair over pytrees, plus ``state_pspecs``
+deriving optimizer-state PartitionSpecs from the parameter specs (states
+shard exactly like their parameters; factored states drop the corresponding
+dim).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1.0, warmup)
+        t = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1,
+                 min_frac: float = 0.01) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Warmup-Stable-Decay (minicpm): flat plateau, short final decay."""
+    decay_start = int(total * (1.0 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1.0, warmup)
+        t = jnp.clip((step - decay_start) / jnp.maximum(1.0, total - decay_start),
+                     0.0, 1.0)
+        decay = base_lr * jnp.exp(jnp.log(jnp.maximum(min_frac, 1e-8)) * t)
+        out = jnp.where(step < warmup, warm, base_lr)
+        return jnp.where(step >= decay_start, decay, out)
+    return lr
+
+
+def get_schedule(name: str, base_lr: float, warmup: int, total: int):
+    if name == "wsd":
+        return wsd_schedule(base_lr, warmup, total)
+    return cosine_schedule(base_lr, warmup, total)
+
+
+# ---------------------------------------------------------------------------
+# common utilities
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+def _is_matrix(x) -> bool:
+    return x.ndim >= 2
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params: PyTree) -> PyTree:
+        zeros = lambda x: jnp.zeros(x.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: PyTree, state: PyTree, params: PyTree):
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        step = state["step"] + 1
+        lr = self.schedule(step)
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v2 / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decoupled decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}, {
+            "grad_norm": gnorm, "lr": lr,
+        }
+
+    def state_pspecs(self, param_specs: PyTree, params_shape: PyTree) -> PyTree:
+        return {
+            "m": param_specs,
+            "v": param_specs,
+            "step": P(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no momentum)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    schedule: Callable
+    decay: float = 0.99
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params: PyTree) -> PyTree:
+        def vr(x):
+            if _is_matrix(x):
+                return jnp.zeros(x.shape[:-1], jnp.float32)
+            return jnp.zeros(x.shape, jnp.float32)
+
+        def vc(x):
+            if _is_matrix(x):
+                return jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32)
+            return jnp.zeros((0,), jnp.float32)
+
+        return {
+            "vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: PyTree, state: PyTree, params: PyTree):
+        step = state["step"] + 1
+        lr = self.schedule(step)
+        d = self.decay
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if _is_matrix(g):
+                vr2 = d * vr + (1 - d) * g2.mean(axis=-1)
+                vc2 = d * vc + (1 - d) * g2.mean(axis=-2)
+                # factored precondition: g / sqrt(outer(vr, vc) / mean(vr))
+                u = g * jax.lax.rsqrt(
+                    jnp.einsum("...r,...c->...rc", vr2, vc2)
+                    / jnp.maximum(vr2.mean(axis=-1)[..., None, None], self.eps)
+                    + self.eps
+                )
+            else:
+                vr2 = d * vr + (1 - d) * g2
+                vc2 = vc
+                u = g * jax.lax.rsqrt(vr2 + self.eps)
+            # update clipping (RMS ≤ threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            if self.weight_decay and p.ndim >= 2:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr2, vc2
+
+        out = jax.tree.map(upd, grads, state["vr"], state["vc"], params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"vr": pick(1), "vc": pick(2), "step": step}, {"lr": lr}
+
+    def state_pspecs(self, param_specs: PyTree, params_shape: PyTree) -> PyTree:
+        def pad(spec, ndim):
+            t = tuple(spec)
+            return (None,) * (ndim - len(t)) + t
+
+        def vr_spec(spec, shp):
+            nd = len(shp.shape)
+            if nd >= 2:
+                return P(*pad(spec, nd)[:-1])
+            return P(*pad(spec, nd))
+
+        def vc_spec(spec, shp):
+            nd = len(shp.shape)
+            if nd >= 2:
+                s = pad(spec, nd)
+                return P(*(s[:-2] + (s[-1],)))
+            return P()
+
+        is_p = lambda x: isinstance(x, P)
+        return {
+            "vr": jax.tree.map(vr_spec, param_specs, params_shape, is_leaf=is_p),
+            "vc": jax.tree.map(vc_spec, param_specs, params_shape, is_leaf=is_p),
+            "step": P(),
+        }
+
+
+def get_optimizer(cfg, total_steps: int = 10_000, base_lr: float = 3e-4,
+                  warmup: int = 200):
+    sched = get_schedule(cfg.lr_schedule, base_lr, warmup, total_steps)
+    if cfg.optimizer == "adafactor":
+        return Adafactor(schedule=sched)
+    return AdamW(schedule=sched)

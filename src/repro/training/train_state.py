@@ -1,0 +1,64 @@
+"""Train state + train-step factory with microbatched gradient accumulation."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def make_train_step(
+    loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+    optimizer,
+    microbatches: int = 1,
+    grad_shardings: Optional[PyTree] = None,
+) -> Callable:
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt, metrics)``.
+
+    ``microbatches > 1`` splits the global batch along dim 0 and accumulates
+    gradients with a ``lax.scan`` — activation memory scales with the
+    microbatch, enabling the 1T-param cells (DESIGN.md §6).
+
+    ``grad_shardings`` (NamedSharding pytree matching params) pins the
+    accumulator's layout — without it the scan carry can end up replicated,
+    multiplying temp memory by the model-axis size.
+    """
+
+    def pin(tree: PyTree) -> PyTree:
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    def train_step(params: PyTree, opt_state: PyTree, batch: PyTree):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = pin(grads)
+        else:
+            def reshape(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+
+            mb_batch = jax.tree.map(reshape, batch)
+            zero = pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+            def accum(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grad_acc = pin(jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grad_acc, grads))
+                return (loss_acc + loss, grad_acc), None
+
+            (loss, grads), _ = jax.lax.scan(accum, (jnp.zeros(()), zero), mb_batch)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_opt, metrics = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step

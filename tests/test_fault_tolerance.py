@@ -1,0 +1,221 @@
+"""Fault tolerance: checkpoint/restart determinism, elastic resharding,
+async save integrity, gradient compression convergence."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeConfig, get_config
+from repro.training import checkpoint as ckpt
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def _mk_trainer(tmp, steps=6, ckpt_every=2, compress=False, seed=0,
+                arch="llama3.2-1b", async_ckpt=False, stop_after=0):
+    cfg = get_config(arch).reduced()
+    shape = ShapeConfig("t", seq_len=16, global_batch=4, kind="train")
+    tcfg = TrainerConfig(total_steps=steps, ckpt_every=ckpt_every,
+                         ckpt_dir=tmp, compress_grads=compress,
+                         async_ckpt=async_ckpt, stop_after=stop_after)
+    return Trainer(cfg, shape, tcfg, seed=seed)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(12.0).reshape(3, 4),
+                "b": {"c": jnp.ones((2,), jnp.int32)}}
+        ckpt.save(str(tmp_path), 3, tree)
+        restored, step = ckpt.restore(str(tmp_path), tree)
+        assert step == 3
+        np.testing.assert_array_equal(restored["a"], tree["a"])
+        np.testing.assert_array_equal(restored["b"]["c"], tree["b"]["c"])
+
+    def test_crc_detects_corruption(self, tmp_path):
+        tree = {"w": jnp.ones((8, 8))}
+        path = ckpt.save(str(tmp_path), 1, tree)
+        # corrupt the single leaf file
+        for name in os.listdir(path):
+            if name.endswith(".npy"):
+                arr = np.load(os.path.join(path, name))
+                arr[0] += 1
+                np.save(os.path.join(path, name), arr)
+        with pytest.raises(IOError):
+            ckpt.restore(str(tmp_path), tree)
+
+    def test_keeps_latest(self, tmp_path):
+        tree = {"w": jnp.ones(3)}
+        for s in (1, 2, 3):
+            ckpt.save(str(tmp_path), s, tree)
+        assert ckpt.latest_steps(str(tmp_path)) == [1, 2, 3]
+        _, step = ckpt.restore(str(tmp_path), tree)
+        assert step == 3
+
+
+class TestRestartDeterminism:
+    def test_resume_bitwise_identical(self, tmp_path):
+        """Uninterrupted run ≡ crash-at-step-4 + restart (same final params)."""
+        full = _mk_trainer(str(tmp_path / "full"), steps=6)
+        hist_full = full.fit()
+
+        crash_dir = str(tmp_path / "crash")
+        # crash mid-run: same 6-step schedule, killed after step 4
+        part = _mk_trainer(crash_dir, steps=6, ckpt_every=2, stop_after=4)
+        part.fit()
+        resumed = _mk_trainer(crash_dir, steps=6, ckpt_every=2)
+        hist_res = resumed.fit(resume=True)
+
+        flat_a = jax.tree.leaves(full.params)
+        flat_b = jax.tree.leaves(resumed.params)
+        for a, b in zip(flat_a, flat_b):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # loss history continues where it left off
+        assert hist_res["step"][0] == 4
+        np.testing.assert_allclose(hist_full["loss"][4:], hist_res["loss"],
+                                   rtol=1e-6)
+
+    def test_pipeline_step_keyed(self):
+        from repro.data.pipeline import PipelineSpec
+
+        cfg = get_config("llama3.2-1b").reduced()
+        shape = ShapeConfig("t", 16, 4, "train")
+        p1 = PipelineSpec(cfg, shape, seed=0)
+        p2 = PipelineSpec(cfg, shape, seed=0)
+        np.testing.assert_array_equal(p1.batch(7)["tokens"], p2.batch(7)["tokens"])
+        assert not np.array_equal(p1.batch(7)["tokens"], p1.batch(8)["tokens"])
+        # host-sharded slice == slice of the global batch
+        full = p1.batch(3)["tokens"]
+        np.testing.assert_array_equal(p1.batch(3, lo=1, hi=3)["tokens"], full[1:3])
+
+
+class TestElasticResharding:
+    def test_restore_onto_multi_device_mesh(self, tmp_path):
+        """Checkpoint written on 1 device restores sharded onto 8 devices
+        (subprocess with a forced 8-device CPU topology)."""
+        t = _mk_trainer(str(tmp_path), steps=2, ckpt_every=2)
+        t.fit()
+        script = textwrap.dedent(f"""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import jax, numpy as np
+            from repro.configs import ShapeConfig, get_config
+            from repro.models.registry import get_model
+            from repro.training import checkpoint as ckpt
+            from repro.training.optimizer import get_optimizer
+            from repro.distributed.sharding import param_pspecs, to_named
+            from repro.launch.mesh import make_mesh, MeshAxes
+
+            cfg = get_config("llama3.2-1b").reduced()
+            model = get_model(cfg)
+            params = model.init(jax.random.key(0))
+            opt = get_optimizer(cfg)
+            opt_state = opt.init(params)
+            mesh = make_mesh((2, 4), ("data", "model"))
+            ax = MeshAxes(mesh)
+            pspecs = param_pspecs(cfg, jax.eval_shape(lambda: params), ax)
+            sh = {{"params": to_named(mesh, pspecs), "opt": None}}
+            state, step = ckpt.restore(
+                r"{tmp_path}", {{"params": params, "opt": opt_state}},
+                shardings=None)
+            # reshard params explicitly onto the 8-device mesh
+            resharded = jax.tree.map(
+                lambda a, s: jax.device_put(np.asarray(a), s),
+                state["params"], to_named(mesh, pspecs),
+                is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+            n_sharded = sum(
+                len(a.sharding.device_set) > 1 for a in jax.tree.leaves(resharded))
+            assert n_sharded > 0, "nothing was sharded"
+            print("ELASTIC_OK", step, n_sharded)
+        """)
+        env = dict(os.environ, PYTHONPATH="src")
+        out = subprocess.run([sys.executable, "-c", script], env=env,
+                             capture_output=True, text=True, cwd="/root/repo",
+                             timeout=300)
+        assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]
+
+
+class TestAsyncCheckpoint:
+    def test_async_equals_sync(self, tmp_path):
+        t_sync = _mk_trainer(str(tmp_path / "s"), steps=4, ckpt_every=2)
+        t_sync.fit()
+        t_async = _mk_trainer(str(tmp_path / "a"), steps=4, ckpt_every=2,
+                              async_ckpt=True)
+        t_async.fit()
+        a, _ = ckpt.restore(str(tmp_path / "s"),
+                            {"params": t_sync.params, "opt": t_sync.opt_state})
+        b, _ = ckpt.restore(str(tmp_path / "a"),
+                            {"params": t_async.params, "opt": t_async.opt_state})
+        for x, y in zip(jax.tree.leaves(a["params"]), jax.tree.leaves(b["params"])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestGradientCompression:
+    def test_wire_savings_and_convergence(self, tmp_path):
+        from repro.distributed.compression import Int8Compressor
+
+        base = _mk_trainer(str(tmp_path / "fp"), steps=8, ckpt_every=100)
+        hist_fp = base.fit()
+        comp = _mk_trainer(str(tmp_path / "q8"), steps=8, ckpt_every=100,
+                           compress=True)
+        hist_q8 = comp.fit()
+        # int8 path converges: loss drops and stays within 10% of fp32 path
+        assert hist_q8["loss"][-1] < hist_q8["loss"][0]
+        assert abs(hist_q8["loss"][-1] - hist_fp["loss"][-1]) < 0.1 * hist_fp["loss"][-1] + 0.35
+        fp32_b, int8_b = Int8Compressor.wire_bytes(base.params)
+        assert int8_b < 0.27 * fp32_b
+
+    def test_quantize_roundtrip_error_feedback(self):
+        from repro.distributed.compression import (
+            Int8Compressor, dequantize_int8, quantize_int8)
+
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+        q, s = quantize_int8(g)
+        err = g - dequantize_int8(q, s)
+        assert float(jnp.abs(err).max()) <= float(s) * 0.5 + 1e-6
+        # error feedback: two-step quantized sum ≈ true sum
+        comp = Int8Compressor()
+        e = comp.init({"g": g})
+        total = jnp.zeros_like(g)
+        for _ in range(4):
+            quant, e = comp.compress({"g": g}, e)
+            total = total + comp.decompress(quant)["g"]
+        np.testing.assert_allclose(total / 4, g, atol=float(s))
+
+
+class TestCompressedPsum:
+    def test_matches_fp32_psum_subprocess(self):
+        """int8 shard_map psum ≈ fp32 psum on an 8-device mesh."""
+        script = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import PartitionSpec as P
+            from repro.distributed.compression import compressed_psum
+            from repro.launch.mesh import make_mesh
+
+            mesh = make_mesh((8,), ("data",))
+            x = jax.random.normal(jax.random.key(0), (8, 64, 64), jnp.float32)
+
+            def f(x_loc):
+                return compressed_psum(x_loc[0], "data")
+
+            got = jax.jit(jax.shard_map(
+                f, mesh=mesh, in_specs=P("data"), out_specs=P(),
+                check_vma=False))(x)
+            want = x.sum(axis=0)
+            scale = float(jnp.max(jnp.abs(x))) / 127.0
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=8 * scale)
+            print("PSUM_OK")
+        """)
+        env = dict(os.environ, PYTHONPATH="src")
+        out = subprocess.run([sys.executable, "-c", script], env=env,
+                             capture_output=True, text=True, cwd="/root/repo",
+                             timeout=300)
+        assert "PSUM_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each of the 10 assigned archs instantiates a REDUCED config of the same
+family and runs one forward/train step on CPU, asserting output shapes and
+no NaNs.  Decode paths get one prefill + one decode step.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, ShapeConfig, get_config, list_archs
+from repro.models.registry import get_model, input_specs
+
+ARCHS = list(list_archs())
+
+
+def _small_shape(cfg):
+    return ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+
+
+def _make_batch(cfg, kind="train"):
+    shape = ShapeConfig("smoke", 32, 2, kind)
+    return input_specs(cfg, shape, abstract=False, seed=0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _make_batch(cfg, "train")
+    loss = jax.jit(model.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch}: loss={loss}"
+    assert float(loss) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_grad_step_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _make_batch(cfg, "train")
+    grads = jax.jit(jax.grad(model.loss_fn))(params, batch)
+    flat, _ = jax.tree.flatten(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), f"{arch}: NaN grads"
+    # at least one nonzero gradient
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_roundtrip(arch):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _make_batch(cfg, "prefill")
+    max_len = 40
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len)
+    )(params, batch)
+    assert logits.shape[0] == 2 and logits.shape[1] == 1
+    assert jnp.all(jnp.isfinite(logits)), f"{arch}: prefill NaNs"
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits2, cache2 = jax.jit(model.decode_step)(params, token, cache)
+    assert logits2.shape == logits.shape
+    assert jnp.all(jnp.isfinite(logits2)), f"{arch}: decode NaNs"
+    assert int(cache2["length"]) == int(cache["length"]) + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_teacher_forcing(arch):
+    """Decode-with-cache must agree with full forward on the same prefix."""
+    import dataclasses
+
+    cfg = get_config(arch).reduced()
+    if cfg.family == "encdec":
+        pytest.skip("encdec forward consumes dict batches; covered separately")
+    if cfg.family == "moe":
+        # capacity dropping is data-dependent and differs between a 9-token
+        # forward and a 1-token decode — disable drops for the equivalence
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=float(cfg.n_experts))
+    model = get_model(cfg)
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(2, 9)), jnp.int32)
+
+    full_batch = {"tokens": toks, "labels": toks}
+    shape = ShapeConfig("smoke", 9, 2, "train")
+    batch = input_specs(cfg, shape, abstract=False, seed=0)
+    batch["tokens"] = toks
+    logits_full = jax.jit(model.forward)(params, batch)
+    n_extra = logits_full.shape[1] - 9
+
+    pre_batch = dict(batch)
+    pre_batch.pop("labels", None)
+    pre_batch["tokens"] = toks[:, :8]
+    # cache capacity: prompt (+ any frontend prefix) + decode headroom
+    cap = 16 + cfg.frontend_tokens
+    _, cache = jax.jit(lambda p, b: model.prefill(p, b, cap))(params, pre_batch)
+    logits_dec, _ = jax.jit(model.decode_step)(params, toks[:, 8:9], cache)
+
+    ref = logits_full[:, n_extra + 8]
+    got = logits_dec[:, 0]
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_encdec_decode_matches_forward():
+    cfg = get_config("seamless-m4t-medium").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(0)
+    frames = jnp.asarray(rng.standard_normal((2, cfg.frontend_tokens, cfg.d_model)),
+                         jnp.bfloat16)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(2, 9)), jnp.int32)
+    logits_full = jax.jit(model.forward)(params, {"frames": frames, "tokens": toks})
+    _, cache = jax.jit(lambda p, b: model.prefill(p, b, 16))(
+        params, {"frames": frames, "tokens": toks[:, :8]})
+    logits_dec, _ = jax.jit(model.decode_step)(params, toks[:, 8:9], cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0], np.float32),
+        np.asarray(logits_full[:, 8], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_param_counts_match_analytic():
+    """init() parameter totals ≈ the analytic count used for MODEL_FLOPS."""
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / analytic < 0.15, (
+            f"{arch}: actual={actual} analytic={analytic}"
+        )
+
+
+def test_full_configs_param_counts():
+    """Full (non-reduced) analytic param counts land near the public figures."""
+    expect = {
+        "llama3.2-1b": (1.0e9, 1.8e9),
+        "internlm2-1.8b": (1.5e9, 2.3e9),
+        "minicpm-2b": (2.0e9, 3.3e9),
+        "codeqwen1.5-7b": (6.0e9, 8.5e9),
+        "zamba2-7b": (6.0e9, 9.0e9),
+        "mamba2-370m": (3.0e8, 4.9e8),
+        "deepseek-moe-16b": (1.3e10, 2.0e10),
+        "kimi-k2-1t-a32b": (0.8e12, 1.3e12),
+        "seamless-m4t-medium": (0.4e9, 1.6e9),
+        "internvl2-2b": (1.5e9, 2.6e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]B"
+    # MoE active counts
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert 2.0e10 <= kimi.active_param_count() <= 4.5e10  # "a32b"

@@ -1,0 +1,134 @@
+"""Partitioner unit + property tests (paper §II-C, Table III)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partitioner as pt
+from repro.core.send_recv import build_comm_plans
+from repro.core.sparse import random_sparse
+from repro.data.graphchallenge import make_sparse_dnn
+
+
+def _net(n=256, layers=8, seed=0, mode="radix"):
+    return make_sparse_dnn(n, n_layers=layers, seed=seed, mode=mode)
+
+
+class TestPartitionBasics:
+    def test_random_partition_balanced(self):
+        parts = pt.random_partition(1000, 7, seed=3)
+        counts = np.bincount(parts, minlength=7)
+        assert counts.max() - counts.min() <= 1
+
+    def test_block_partition_contiguous(self):
+        parts = pt.block_partition(100, 8)
+        assert np.all(np.diff(parts) >= 0)
+        assert np.bincount(parts).max() <= int(np.ceil(100 / 8)) + 1
+
+    @pytest.mark.parametrize("method", ["hgp", "random", "block"])
+    def test_cover_and_shapes(self, method):
+        net = _net()
+        res = pt.partition_network(net.layers, P=8, method=method, seed=0)
+        assert len(res.parts) == len(net.layers) + 1
+        for p in res.parts:
+            assert p.shape == (256,)
+            assert p.min() >= 0 and p.max() < 8
+
+    def test_hgp_balance(self):
+        net = _net()
+        res = pt.partition_network(net.layers, P=8, method="hgp", seed=0)
+        assert res.imbalance(net.layers) <= 1.10  # eps=0.05 + slack
+
+
+class TestCommVolume:
+    def test_hgp_beats_random_structured(self):
+        """Table III: HGP-DNN reduces inter-worker volume vs RP by a large
+        factor on structured (RadiX-Net-like) sparsity."""
+        net = _net(n=512, layers=16)
+        hgp = pt.partition_network(net.layers, P=8, method="hgp", seed=0)
+        rp = pt.partition_network(net.layers, P=8, method="random", seed=0)
+        v_hgp = pt.measure_comm_volume(net.layers, hgp).total_rows_sent
+        v_rp = pt.measure_comm_volume(net.layers, rp).total_rows_sent
+        assert v_hgp < v_rp / 3.0  # paper: ~9.3x; structured synthetic: >3x
+
+    def test_hgp_never_worse_than_block(self):
+        for mode, rewire in [("radix", 0.0), ("radix", 0.3), ("random", 0.0)]:
+            net = make_sparse_dnn(256, n_layers=6, seed=1, mode=mode, rewire_frac=rewire)
+            hgp = pt.partition_network(net.layers, P=4, method="hgp", seed=0)
+            blk = pt.partition_network(net.layers, P=4, method="block", seed=0)
+            v_h = pt.measure_comm_volume(net.layers, hgp).total_rows_sent
+            v_b = pt.measure_comm_volume(net.layers, blk).total_rows_sent
+            assert v_h <= v_b
+
+    def test_volume_zero_single_worker(self):
+        net = _net(n=128, layers=4)
+        res = pt.partition_network(net.layers, P=1, method="hgp", seed=0)
+        rep = pt.measure_comm_volume(net.layers, res)
+        assert rep.total_rows_sent == 0
+
+
+class TestSendRecvPlans:
+    def test_send_recv_duality(self):
+        net = _net(n=256, layers=6)
+        res = pt.partition_network(net.layers, P=8, method="hgp", seed=0)
+        plans = build_comm_plans(net.layers, res)
+        for lp in plans:
+            for w in lp.workers:
+                for tgt, rows in w.send.items():
+                    assert tgt != w.worker
+                    np.testing.assert_array_equal(rows, lp.workers[tgt].recv[w.worker])
+
+    def test_plan_matches_evaluator(self):
+        net = _net(n=256, layers=6)
+        for method in ["hgp", "random"]:
+            res = pt.partition_network(net.layers, P=8, method=method, seed=0)
+            plans = build_comm_plans(net.layers, res)
+            total = sum(lp.total_rows_sent() for lp in plans)
+            rep = pt.measure_comm_volume(net.layers, res)
+            assert total == rep.total_rows_sent
+
+    def test_needed_rows_cover_weights(self):
+        net = _net(n=256, layers=6)
+        res = pt.partition_network(net.layers, P=8, method="random", seed=2)
+        plans = build_comm_plans(net.layers, res)
+        for k, W in enumerate(net.layers):
+            for w in plans[k].workers:
+                if len(w.owned_out_rows) == 0:
+                    continue
+                sub = W.select_rows(w.owned_out_rows)
+                needed_cols = np.unique(sub.indices)
+                assert np.all(np.isin(needed_cols, w.needed_rows))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([64, 128]),
+    P=st.integers(min_value=2, max_value=8),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_property_partition_cover_balance(n, P, seed):
+    """Any partition method covers all rows and respects the balance cap."""
+    rng = np.random.default_rng(seed)
+    layers = [random_sparse(n, n, 8, rng) for _ in range(3)]
+    res = pt.partition_network(layers, P=P, method="hgp", seed=seed)
+    for p in res.parts:
+        assert np.all((p >= 0) & (p < P))
+    assert res.imbalance(layers) < 1.6  # loose cap for tiny instances
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    P=st.integers(min_value=2, max_value=6),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_property_duality_random_nets(P, seed):
+    rng = np.random.default_rng(seed)
+    layers = [random_sparse(96, 96, 6, rng) for _ in range(3)]
+    res = pt.partition_network(layers, P=P, method="random", seed=seed)
+    plans = build_comm_plans(layers, res)
+    for lp in plans:
+        sent = {(w.worker, t): r for w in lp.workers for t, r in w.send.items()}
+        recvd = {(s, w.worker): r for w in lp.workers for s, r in w.recv.items()}
+        assert set(sent) == set(recvd)
+        for key in sent:
+            np.testing.assert_array_equal(sent[key], recvd[key])

@@ -1,0 +1,135 @@
+"""Sharding-rule unit tests (no devices needed — AbstractMesh)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+    zero_param_pspecs,
+)
+from repro.launch.mesh import MeshAxes
+from repro.models.registry import cache_specs, get_model, input_specs
+
+
+def _mesh(shape=(16, 16), axes=("data", "model")):
+    return AbstractMesh(shape, axes)
+
+
+def _ax(mesh):
+    return MeshAxes(mesh)
+
+
+class TestParamSpecs:
+    def test_dense_rules(self):
+        cfg = get_config("internlm2-1.8b")
+        model = get_model(cfg)
+        pshape = jax.eval_shape(model.init, jax.random.key(0))
+        specs = param_pspecs(cfg, pshape, _ax(_mesh()))
+        blocks = specs["blocks"]
+        assert blocks["attn"]["wq"] == P(None, None, "model", None)
+        # kv=8 does not divide model=16 → replicated heads
+        assert blocks["attn"]["wk"] == P(None, None, None, None)
+        assert blocks["mlp"]["wi_gate"] == P(None, None, "model")
+        assert blocks["mlp"]["wo"] == P(None, "model", None)
+        assert specs["embed"] == P("model", None)
+
+    def test_moe_experts_shard(self):
+        cfg = get_config("deepseek-moe-16b")
+        model = get_model(cfg)
+        pshape = jax.eval_shape(model.init, jax.random.key(0))
+        specs = param_pspecs(cfg, pshape, _ax(_mesh()))
+        moe = specs["moe_blocks"]["moe"]
+        assert moe["w_gate"][1] == "model"      # [L, E, D, F] → E sharded
+        assert moe["w_down"][1] == "model"
+
+    def test_mamba_heads_shard(self):
+        cfg = get_config("mamba2-370m")
+        model = get_model(cfg)
+        pshape = jax.eval_shape(model.init, jax.random.key(0))
+        specs = param_pspecs(cfg, pshape, _ax(_mesh()))
+        blocks = specs["blocks"]
+        assert blocks["in_x"] == P(None, None, "model")
+        assert blocks["A_log"] == P(None, "model")
+        assert blocks["out_proj"] == P(None, "model", None)
+
+    def test_fsdp_adds_data_axis(self):
+        cfg = get_config("codeqwen1.5-7b")
+        model = get_model(cfg)
+        pshape = jax.eval_shape(model.init, jax.random.key(0))
+        specs = param_pspecs(cfg, pshape, _ax(_mesh()), fsdp=True)
+        assert specs["blocks"]["mlp"]["wi_gate"] == P(None, ("data",), "model")
+
+    def test_no_indivisible_sharding(self):
+        """Every spec'd axis size divides its dim, for every arch."""
+        mesh = _mesh()
+        ax = _ax(mesh)
+        for arch in ("internlm2-1.8b", "deepseek-moe-16b", "mamba2-370m",
+                     "zamba2-7b", "minicpm-2b", "seamless-m4t-medium"):
+            cfg = get_config(arch)
+            model = get_model(cfg)
+            pshape = jax.eval_shape(model.init, jax.random.key(0))
+            specs = param_pspecs(cfg, pshape, ax, fsdp=True)
+
+            def check(path, leaf, spec):
+                for dim, s in zip(leaf.shape, tuple(spec)):
+                    if s is None:
+                        continue
+                    size = ax.axis_size(s)
+                    assert dim % size == 0, (arch, path, leaf.shape, spec)
+
+            jax.tree_util.tree_map_with_path(
+                check, pshape, specs,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    def test_zero_strategy_skips_stacked_dims(self):
+        cfg = get_config("internlm2-1.8b")
+        model = get_model(cfg)
+        pshape = jax.eval_shape(model.init, jax.random.key(0))
+        specs = zero_param_pspecs(cfg, pshape, _ax(_mesh()))
+        # stacked layer dim (dim 0) must never be sharded
+        for path, spec in jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]:
+            names = [str(e.key) for e in path
+                     if isinstance(e, jax.tree_util.DictKey)]
+            if "blocks" in names and len(tuple(spec)):
+                assert tuple(spec)[0] is None, (path, spec)
+
+
+class TestBatchCacheSpecs:
+    def test_train_batch_over_dp(self):
+        cfg = get_config("llama3.2-1b")
+        shape = SHAPES["train_4k"]
+        batch = input_specs(cfg, shape, abstract=True)
+        specs = batch_pspecs(cfg, shape, batch, _ax(_mesh((2, 16, 16),
+                                                          ("pod", "data", "model"))))
+        assert specs["tokens"] == P(("pod", "data"), None)
+
+    def test_decode_cache_seq_over_model(self):
+        cfg = get_config("llama3.2-1b")
+        shape = SHAPES["decode_32k"]
+        cache = cache_specs(cfg, shape, abstract=True)
+        specs = cache_pspecs(cfg, shape, cache, _ax(_mesh()))
+        # [L, B, S, KV, dh]: batch→data, seq→model
+        assert specs["k"] == P(None, ("data",), ("model",), None, None)
+
+    def test_long500k_batch1_seq_over_everything(self):
+        cfg = get_config("zamba2-7b")
+        shape = SHAPES["long_500k"]
+        cache = cache_specs(cfg, shape, abstract=True)
+        specs = cache_pspecs(cfg, shape, cache, _ax(_mesh()))
+        kv_spec = specs["kv"][0]
+        # batch=1 unshardable → sequence takes (data, model)
+        assert kv_spec[-3] == ("data", "model")
+
+    def test_ssm_state_heads_over_model(self):
+        cfg = get_config("mamba2-370m")
+        shape = SHAPES["decode_32k"]
+        cache = cache_specs(cfg, shape, abstract=True)
+        specs = cache_pspecs(cfg, shape, cache, _ax(_mesh()))
+        assert specs["ssm"][2] == "model"   # [L, B, H, P, N] → H sharded
