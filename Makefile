@@ -1,0 +1,25 @@
+# Single entry point for the builder and CI.
+#
+#   make test         tier-1 suite (ROADMAP "Tier-1 verify")
+#   make bench-quick  CI-sized benchmark sweep + BENCH_fsi.json perf snapshot
+#   make bench        full benchmark sweep
+#   make lint         byte-compile + import-sanity over src/ (no external
+#                     linter dependency baked into the image)
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test bench-quick bench lint
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-quick:
+	$(PY) -m benchmarks.run --quick --json BENCH_fsi.json
+
+bench:
+	$(PY) -m benchmarks.run --json BENCH_fsi.json
+
+lint:
+	$(PY) -m compileall -q src benchmarks tests
+	$(PY) -c "import repro.core.backends, repro.core.fsi, repro.faas.simulator, repro.faas.payload; print('import sanity: ok')"

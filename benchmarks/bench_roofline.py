@@ -1,26 +1,91 @@
-"""Roofline table from the dry-run sweep (deliverable g).
+"""Roofline table from the dry-run sweep (deliverable g) + SpMM kernel
+roofline (PR 1).
 
 Reads ``dryrun_sweep.json`` (produced by ``python -m repro.launch.dryrun
 --all --both-meshes --json dryrun_sweep.json``) and prints the per-cell
 compute/memory/collective terms + bottleneck.  If the sweep file is missing,
-compiles a small representative subset on the fly."""
+only the SpMM rows are produced.
+
+The ``spmm_roofline_*`` rows time one GraphChallenge butterfly layer through
+every compute backend formulation (seed ``np.add.at`` scatter, segment
+``matmul_dense_fast``, Pallas BSR) and report achieved GFLOP/s — the perf
+trajectory future PRs regress against via ``benchmarks/run.py --json``.
+"""
 
 from __future__ import annotations
 
 import json
 import os
+import time
 from typing import List
 
 SWEEP_JSON = os.path.join(os.path.dirname(__file__), "..", "dryrun_sweep.json")
 
 
-def run(sweep_json: str = SWEEP_JSON) -> List[dict]:
+def time_spmm_variants(W, x, bias: float, repeats: int = 5):
+    """[(variant, seconds)] for one layer shard across every SpMM
+    formulation: seed ``np.add.at`` scatter, segment ``matmul_dense_fast``,
+    Pallas BSR (skipped when jax is unavailable).  Shared by this module's
+    roofline rows and ``bench_fsi_channels``'s speedup rows."""
+    from repro.core.backends import get_backend
+
+    def timed(fn):
+        fn()  # warmup (jit compile, allocator)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            fn()
+        return (time.perf_counter() - t0) / repeats
+
+    variants = [
+        ("seed_scatter", lambda: W.matmul_dense_scatter(x)),
+        ("numpy_fast", lambda: W.matmul_dense_fast(x)),
+    ]
+    try:
+        be = get_backend("pallas-bsr")
+        state = be.prepare(W)
+        variants.append(("pallas_bsr", lambda: be.apply(state, x, bias)))
+    except ImportError:
+        variants.append(("pallas_bsr", None))
+    return [(name, timed(fn) if fn else None) for name, fn in variants]
+
+
+def spmm_roofline(neurons: int = 512, batch: int = 64,
+                  repeats: int = 5) -> List[dict]:
+    import numpy as np
+
+    from repro.data.graphchallenge import make_inputs, make_sparse_dnn
+
+    net = make_sparse_dnn(neurons, n_layers=1, seed=0)
+    W = net.layers[0]
+    x = make_inputs(neurons, batch, seed=1).astype(np.float32)
+    flops = 2.0 * W.nnz * batch
+    rows = []
+    base = None
+    for name, t in time_spmm_variants(W, x, net.bias, repeats):
+        if t is None:
+            rows.append(dict(name=f"spmm_roofline_{name}", us_per_call="",
+                             note="jax not installed"))
+            continue
+        base = base or t
+        rows.append(dict(
+            name=f"spmm_roofline_{name}",
+            us_per_call=round(t * 1e6, 1),
+            gflops=round(flops / t / 1e9, 3),
+            speedup_vs_seed=round(base / t, 2),
+            neurons=neurons, batch=batch,
+        ))
+    return rows
+
+
+def run(sweep_json: str = SWEEP_JSON, neurons: int = 512,
+        batch: int = 64) -> List[dict]:
+    rows = spmm_roofline(neurons=neurons, batch=batch)
     if not os.path.exists(sweep_json):
-        return [dict(name="roofline_missing",
-                     note="run repro.launch.dryrun --all --both-meshes first")]
+        rows.append(dict(name="roofline_missing",
+                         note="run repro.launch.dryrun --all --both-meshes first"))
+        return rows
     with open(sweep_json) as f:
         cells = json.load(f)
-    rows = []
     for c in cells:
         if c["status"] != "ok":
             rows.append(dict(name=f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}",

@@ -19,14 +19,15 @@ charged *between* the sends and the receives).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Literal, Sequence
+from typing import Any, Dict, List, Literal, Sequence, Union
 
 import numpy as np
 
+from repro.core.backends import ComputeBackend, get_backend
 from repro.core.partitioner import PartitionResult
 from repro.core.send_recv import LayerCommPlan
 from repro.core.sparse import CSRMatrix
-from repro.data.graphchallenge import GraphChallengeNet, relu_bias_threshold
+from repro.data.graphchallenge import GraphChallengeNet
 from repro.faas.object_service import ObjectFabric
 from repro.faas.payload import Chunk, decode_chunk, pack_rows
 from repro.faas.queue_service import QueueFabric
@@ -37,9 +38,13 @@ __all__ = [
     "WorkerArtifacts",
     "prepare_worker_artifacts",
     "fsi_queue_send_and_local",
+    "fsi_queue_recv",
     "fsi_queue_recv_and_finish",
     "fsi_object_send_and_local",
+    "fsi_object_recv",
     "fsi_object_recv_and_finish",
+    "finish_layer",
+    "charge_finish",
     "run_serial",
 ]
 
@@ -62,6 +67,19 @@ class WorkerLayerArtifact:
     recv_positions: Dict[int, np.ndarray]  # source → positions in needed_rows
     local_flops: float              # 2·nnz over owned-input columns · batch≈ charged pre-recv
     remote_flops: float             # remainder, charged as contributions arrive
+    # per-backend offline compute artifacts (e.g. padded BSR operands),
+    # lazily populated; keyed by the backend's state_key (name + config, so
+    # two differently-configured instances of one backend never share state)
+    backend_states: Dict[str, Any] = dataclasses.field(
+        default_factory=dict, repr=False
+    )
+
+    def state_for(self, backend: ComputeBackend) -> Any:
+        key = getattr(backend, "state_key", backend.name)
+        state = self.backend_states.get(key)
+        if state is None:
+            state = self.backend_states[key] = backend.prepare(self.W_local)
+        return state
 
 
 @dataclasses.dataclass
@@ -83,9 +101,16 @@ def prepare_worker_artifacts(
     layers: Sequence[CSRMatrix],
     partition: PartitionResult,
     plans: Sequence[LayerCommPlan],
+    backend: Union[str, ComputeBackend, None] = None,
 ) -> List[WorkerArtifacts]:
     """Offline post-processing of the trained model (paper: hypergraph
-    partitioning and map construction happen a priori, not per request)."""
+    partitioning and map construction happen a priori, not per request).
+
+    When ``backend`` is given, its per-worker-layer compute artifacts (e.g.
+    the Pallas backend's padded BSR operands) are prepared here too — this is
+    offline work, so it is never billed to a worker clock.
+    """
+    backend = get_backend(backend) if backend is not None else None
     P = partition.P
     out: List[WorkerArtifacts] = []
     for m in range(P):
@@ -123,7 +148,7 @@ def prepare_worker_artifacts(
             nnz_per_col = np.bincount(W_local.indices, minlength=len(needed))
             local_nnz = int(nnz_per_col[owned_positions].sum()) if len(needed) else 0
             arts.append(
-                WorkerLayerArtifact(
+                art := WorkerLayerArtifact(
                     layer=k,
                     W_local=W_local,
                     out_rows=out_rows,
@@ -138,6 +163,8 @@ def prepare_worker_artifacts(
                     remote_flops=2.0 * (W_local.nnz - local_nnz),
                 )
             )
+            if backend is not None:
+                art.state_for(backend)
             weight_nnz += W_local.nnz
             max_needed = max(max_needed, len(needed))
             max_out = max(max_out, len(out_rows))
@@ -243,16 +270,49 @@ def fsi_queue_send_and_local(
     return x_buf
 
 
-def fsi_queue_recv_and_finish(
+def charge_finish(
+    art: WorkerLayerArtifact,
+    x_buf: np.ndarray,
+    x_out: np.ndarray,
+    worker: WorkerState,
+    compute: ComputeModel,
+) -> np.ndarray:
+    """Bill the layer-finish work (remote-contribution MVP + epilogue).
+
+    The charges are derived from the CSR shard (2·nnz FLOPs + 3 ops/output),
+    NOT from what the host backend actually executed — billed time is the
+    modeled Lambda's, identical across compute backends by construction.
+    """
+    batch = x_buf.shape[1]
+    worker.charge_compute(art.remote_flops * batch, compute)
+    worker.charge_compute(3.0 * x_out.size, compute)
+    worker.touch_memory((x_buf.nbytes + x_out.nbytes) + art.W_local.nnz * 8)
+    return x_out.astype(np.float32, copy=False)
+
+
+def finish_layer(
+    art: WorkerLayerArtifact,
+    x_buf: np.ndarray,
+    worker: WorkerState,
+    compute: ComputeModel,
+    bias: float,
+    backend: Union[str, ComputeBackend, None] = None,
+) -> np.ndarray:
+    """Lines 16-18 / 21-23: accumulate contributions + fused activation."""
+    backend = get_backend(backend)
+    x_out = backend.apply(art.state_for(backend), x_buf, bias)
+    return charge_finish(art, x_buf, x_out, worker, compute)
+
+
+def fsi_queue_recv(
     art: WorkerLayerArtifact,
     x_buf: np.ndarray,
     worker: WorkerState,
     fabric: QueueFabric,
     compute: ComputeModel,
-    bias: float,
 ) -> np.ndarray:
-    """Algorithm 1 lines 9-18 for one worker: poll, accumulate, activate."""
-    batch = x_buf.shape[1]
+    """Algorithm 1 lines 9-15 for one worker: long-poll until the buffer is
+    complete (compute deferred — see ``finish_layer``)."""
     # ---- lines 9-15: long-poll until every source completes ----------------
     # Completion is per-source via the 'total byte strings' message attribute
     # (paper: "we cater for the case where source P_n needs to send multiple
@@ -282,14 +342,22 @@ def fsi_queue_recv_and_finish(
                 pending.discard(src)
         if receipts:
             worker.advance_to_abs(fabric.delete_batch(worker.rank, receipts, worker.abs_time))
+    return x_buf
 
+
+def fsi_queue_recv_and_finish(
+    art: WorkerLayerArtifact,
+    x_buf: np.ndarray,
+    worker: WorkerState,
+    fabric: QueueFabric,
+    compute: ComputeModel,
+    bias: float,
+    backend: Union[str, ComputeBackend, None] = None,
+) -> np.ndarray:
+    """Algorithm 1 lines 9-18 for one worker: poll, accumulate, activate."""
+    x_buf = fsi_queue_recv(art, x_buf, worker, fabric, compute)
     # ---- lines 16-18: accumulate contributions + activation ---------------
-    worker.charge_compute(art.remote_flops * batch, compute)
-    z = art.W_local.matmul_dense_fast(x_buf)
-    x_out = relu_bias_threshold(z, bias)
-    worker.charge_compute(3.0 * z.size, compute)
-    worker.touch_memory((x_buf.nbytes + x_out.nbytes) + art.W_local.nnz * 8)
-    return x_out.astype(np.float32)
+    return finish_layer(art, x_buf, worker, compute, bias, backend)
 
 
 # ---------------------------------------------------------------------------
@@ -341,16 +409,15 @@ def fsi_object_send_and_local(
     return x_buf
 
 
-def fsi_object_recv_and_finish(
+def fsi_object_recv(
     art: WorkerLayerArtifact,
     x_buf: np.ndarray,
     worker: WorkerState,
     fabric: ObjectFabric,
     compute: ComputeModel,
-    bias: float,
 ) -> np.ndarray:
-    """Algorithm 2 lines 10-23 for one worker: LIST/GET, accumulate, activate."""
-    batch = x_buf.shape[1]
+    """Algorithm 2 lines 10-20 for one worker: LIST/GET until the recv map is
+    satisfied (compute deferred — see ``finish_layer``)."""
     # ---- lines 10-20: LIST / GET until recv map satisfied ------------------
     expect = dict(art.recv_expect)
     seen: set[str] = set()
@@ -382,14 +449,22 @@ def fsi_object_recv_and_finish(
         if expect and not progress:
             # back off one LIST interval before re-scanning the prefix
             worker.charge_seconds(fabric.list_latency)
+    return x_buf
 
+
+def fsi_object_recv_and_finish(
+    art: WorkerLayerArtifact,
+    x_buf: np.ndarray,
+    worker: WorkerState,
+    fabric: ObjectFabric,
+    compute: ComputeModel,
+    bias: float,
+    backend: Union[str, ComputeBackend, None] = None,
+) -> np.ndarray:
+    """Algorithm 2 lines 10-23 for one worker: LIST/GET, accumulate, activate."""
+    x_buf = fsi_object_recv(art, x_buf, worker, fabric, compute)
     # ---- lines 21-23: accumulate + activation -------------------------------
-    worker.charge_compute(art.remote_flops * batch, compute)
-    z = art.W_local.matmul_dense_fast(x_buf)
-    x_out = relu_bias_threshold(z, bias)
-    worker.charge_compute(3.0 * z.size, compute)
-    worker.touch_memory((x_buf.nbytes + x_out.nbytes) + art.W_local.nnz * 8)
-    return x_out.astype(np.float32)
+    return finish_layer(art, x_buf, worker, compute, bias, backend)
 
 
 # ---------------------------------------------------------------------------
@@ -402,9 +477,11 @@ def run_serial(
     x0: np.ndarray,
     memory_mb: int = 10240,
     compute: ComputeModel | None = None,
+    backend: Union[str, ComputeBackend, None] = None,
 ) -> tuple[np.ndarray, WorkerState]:
     """Single-instance execution (Algorithm 1 with communication removed)."""
     compute = compute or ComputeModel()
+    backend = get_backend(backend)
     batch = x0.shape[1]
     need = estimate_worker_memory_bytes(
         net.total_nnz, net.neurons, net.neurons, batch
@@ -413,11 +490,12 @@ def run_serial(
         raise MemoryError(
             f"FSD-Inf-Serial needs ~{need/1e9:.1f}GB > {memory_mb}MB Lambda limit"
         )
+    # offline artifact prep (unbilled, like the distributed path's maps)
+    states = [backend.prepare(W) for W in net.layers]
     w = WorkerState(rank=0, memory_mb=memory_mb)
     x = x0.astype(np.float32)
-    for W in net.layers:
-        z = W.matmul_dense_fast(x)
-        x = relu_bias_threshold(z, net.bias)
-        w.charge_compute(2.0 * W.nnz * batch + 3.0 * z.size, compute)
+    for W, state in zip(net.layers, states):
+        x = backend.apply(state, x, net.bias).astype(np.float32, copy=False)
+        w.charge_compute(2.0 * W.nnz * batch + 3.0 * x.size, compute)
     w.touch_memory(need)
     return x, w

@@ -80,15 +80,16 @@ class CSRMatrix:
     def select_rows(self, rows: np.ndarray) -> "CSRMatrix":
         """Sub-matrix keeping only ``rows`` (global column ids preserved)."""
         rows = np.asarray(rows, dtype=np.int64)
-        counts = self.indptr[rows + 1] - self.indptr[rows]
+        starts = self.indptr[rows].astype(np.int64)
+        counts = (self.indptr[rows + 1] - self.indptr[rows]).astype(np.int64)
         indptr = np.zeros(len(rows) + 1, dtype=np.int64)
         np.cumsum(counts, out=indptr[1:])
-        idx = np.concatenate(
-            [np.arange(self.indptr[r], self.indptr[r + 1]) for r in rows]
-        ) if len(rows) else np.zeros(0, dtype=np.int64)
+        total = int(indptr[-1])
+        # gather index: for each kept row, a contiguous run into data/indices
+        idx = np.repeat(starts - indptr[:-1], counts) + np.arange(total)
         return CSRMatrix(
             shape=(len(rows), self.ncols),
-            indptr=indptr.astype(np.int64),
+            indptr=indptr,
             indices=self.indices[idx],
             data=self.data[idx],
         )
@@ -102,12 +103,43 @@ class CSRMatrix:
                 out[i] = self.data[lo:hi] @ x[self.indices[lo:hi]]
         return out
 
-    def matmul_dense_fast(self, x: np.ndarray) -> np.ndarray:
-        """Vectorized ``self @ x`` (scatter-add formulation)."""
+    def matmul_dense_scatter(self, x: np.ndarray) -> np.ndarray:
+        """``self @ x`` via ``np.add.at`` scatter-add.
+
+        Kept as the bit-exact oracle for the ``numpy-csr`` compute backend;
+        ``np.add.at`` is unbuffered and 10-50x slower than the segment
+        formulations in :meth:`matmul_dense_fast`.
+        """
         rows = np.repeat(np.arange(self.nrows), np.diff(self.indptr))
         contrib = self.data[:, None] * x[self.indices]
         out = np.zeros((self.nrows, x.shape[1]), dtype=contrib.dtype)
         np.add.at(out, rows, contrib)
+        return out
+
+    def matmul_dense_fast(self, x: np.ndarray) -> np.ndarray:
+        """Vectorized ``self @ x`` with x dense [ncols, B].
+
+        Uniform-nnz rows (the GraphChallenge case: every row has exactly
+        ``nnz_per_row`` entries, and row subsets keep whole rows) reshape the
+        gathered contributions to [nrows, k, B] and contract the k axis with a
+        batched matmul — no [nnz, B] temporary, no scatter.  Ragged rows fall
+        back to a segment ``np.add.reduceat`` over the CSR row pointers.
+        """
+        B = x.shape[1]
+        counts = np.diff(self.indptr)
+        dtype = np.result_type(self.data, x)
+        if self.nnz == 0:
+            return np.zeros((self.nrows, B), dtype=dtype)
+        if counts.size and counts[0] > 0 and np.all(counts == counts[0]):
+            k = int(counts[0])
+            xg = x[self.indices].reshape(self.nrows, k, B)
+            return np.matmul(self.data.reshape(self.nrows, 1, k), xg)[:, 0, :]
+        contrib = self.data[:, None] * x[self.indices]
+        out = np.zeros((self.nrows, B), dtype=contrib.dtype)
+        nonempty = counts > 0
+        starts = self.indptr[:-1][nonempty]
+        if starts.size:
+            out[nonempty] = np.add.reduceat(contrib, starts, axis=0)
         return out
 
 
@@ -162,13 +194,16 @@ class BSRMatrix:
         counts = np.diff(self.indptr).astype(np.int32)
         k = int(max_blocks_per_row or max(1, counts.max(initial=1)))
         bm, bn = self.block_shape
-        blocks = np.zeros((self.n_block_rows, k, bm, bn), dtype=self.blocks.dtype)
-        cols = np.zeros((self.n_block_rows, k), dtype=np.int32)
-        for br in range(self.n_block_rows):
-            lo, hi = int(self.indptr[br]), int(self.indptr[br + 1])
-            n = hi - lo
-            blocks[br, :n] = self.blocks[lo:hi]
-            cols[br, :n] = self.indices[lo:hi]
+        nbr = self.n_block_rows
+        blocks = np.zeros((nbr, k, bm, bn), dtype=self.blocks.dtype)
+        cols = np.zeros((nbr, k), dtype=np.int32)
+        if self.n_blocks:
+            br_idx = np.repeat(np.arange(nbr), counts)
+            slot = np.arange(self.n_blocks) - np.repeat(
+                self.indptr[:-1].astype(np.int64), counts
+            )
+            blocks[br_idx, slot] = self.blocks
+            cols[br_idx, slot] = self.indices
         return blocks, cols, counts
 
 
@@ -220,8 +255,23 @@ def bsr_from_dense(dense: np.ndarray, block_shape: Tuple[int, int]) -> BSRMatrix
     )
 
 
-def bsr_from_csr(csr: CSRMatrix, block_shape: Tuple[int, int]) -> BSRMatrix:
-    return bsr_from_dense(csr.to_dense(), block_shape)
+def bsr_from_csr(
+    csr: CSRMatrix, block_shape: Tuple[int, int], pad: bool = False
+) -> BSRMatrix:
+    """CSR → BSR.  With ``pad=True`` the matrix is zero-padded up to the next
+    block-grid multiple first (arbitrary worker-shard shapes become legal; the
+    padding rows/cols are all-zero so they never contribute)."""
+    dense = csr.to_dense()
+    if pad:
+        bm, bn = block_shape
+        m, n = dense.shape
+        mp = -(-max(m, 1) // bm) * bm
+        np_ = -(-max(n, 1) // bn) * bn
+        if (mp, np_) != (m, n):
+            grown = np.zeros((mp, np_), dtype=dense.dtype)
+            grown[:m, :n] = dense
+            dense = grown
+    return bsr_from_dense(dense, block_shape)
 
 
 def random_sparse(

@@ -4,6 +4,20 @@ Every byte that moves between simulated Lambda workers really moves —
 serialized, zlib-compressed, size-capped and billed exactly as SNS/SQS/S3
 would — so the cost model validation and the Queue-vs-Object trade-off are
 measured, not asserted.
+
+The simulator re-exports are lazy (PEP 562): ``repro.faas.simulator`` imports
+``repro.core.fsi``, which imports fabric submodules from this package — an
+eager import here would make ``import repro.core.fsi`` circular.
 """
 
-from repro.faas.simulator import LatencyModel, run_fsi, FsiRunResult  # noqa: F401
+_SIMULATOR_EXPORTS = ("LatencyModel", "run_fsi", "FsiRunResult")
+
+__all__ = list(_SIMULATOR_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _SIMULATOR_EXPORTS:
+        from repro.faas import simulator
+
+        return getattr(simulator, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -28,17 +28,30 @@ __all__ = ["encode_chunk", "decode_chunk", "pack_rows", "Chunk"]
 _HEADER = struct.Struct("<6I")
 
 
+def _buffer(arr: np.ndarray, dtype) -> object:
+    """Zero-copy buffer view when the array is already contiguous+typed
+    (the pack_rows fast path); otherwise one conversion copy."""
+    if arr.dtype != dtype or not arr.flags.c_contiguous:
+        arr = np.ascontiguousarray(arr, dtype=dtype)
+    return arr.data
+
+
 def encode_chunk(
     layer: int, src: int, row_ids: np.ndarray, values: np.ndarray,
     seq: int, total: int, compress: bool = True,
 ) -> bytes:
     assert values.shape[0] == row_ids.shape[0]
-    body = (
-        _HEADER.pack(layer, src, len(row_ids), values.shape[1], seq, total)
-        + np.ascontiguousarray(row_ids, dtype=np.int32).tobytes()
-        + np.ascontiguousarray(values, dtype=np.float32).tobytes()
+    header = _HEADER.pack(layer, src, len(row_ids), values.shape[1], seq, total)
+    ids_buf = _buffer(row_ids, np.int32)
+    val_buf = _buffer(values, np.float32)
+    if not compress:
+        return header + bytes(ids_buf) + bytes(val_buf)
+    # stream the pieces through one compressobj: no concatenated body temp
+    co = zlib.compressobj(1)
+    return b"".join(
+        (co.compress(header), co.compress(ids_buf), co.compress(val_buf),
+         co.flush())
     )
-    return zlib.compress(body, level=1) if compress else body
 
 
 def decode_chunk(blob: bytes, compressed: bool = True) -> Tuple[int, int, np.ndarray, np.ndarray, int, int]:
@@ -79,6 +92,10 @@ def pack_rows(
     n_rows, batch = values.shape
     if n_rows == 0:
         return []
+    # normalize dtype/layout ONCE so every emitted slice is a zero-copy
+    # contiguous view inside encode_chunk (no per-chunk ascontiguousarray)
+    row_ids = np.ascontiguousarray(row_ids, dtype=np.int32)
+    values = np.ascontiguousarray(values, dtype=np.float32)
     bytes_per_row = 4 + 4 * batch
     est = bytes_per_row * (est_compression_ratio if compress else 1.0)
     rows_per_msg = max(1, int(max_payload / max(est, 1e-9)))

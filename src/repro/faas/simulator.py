@@ -19,7 +19,7 @@ paper cites.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Literal, Optional
+from typing import Dict, List, Literal, Optional, Union
 
 import numpy as np
 
@@ -32,11 +32,13 @@ from repro.core.cost_model import (
     queue_cost,
     serial_cost,
 )
+from repro.core.backends import ComputeBackend, get_backend
 from repro.core.fsi import (
     WorkerArtifacts,
-    fsi_object_recv_and_finish,
+    charge_finish,
+    fsi_object_recv,
     fsi_object_send_and_local,
-    fsi_queue_recv_and_finish,
+    fsi_queue_recv,
     fsi_queue_send_and_local,
     prepare_worker_artifacts,
     run_serial,
@@ -116,15 +118,18 @@ def run_fsi(
     reinvoke_stragglers: bool = False,
     straggler_timeout: float = 3.0,
     partition: Optional[PartitionResult] = None,
+    compute_backend: Union[str, ComputeBackend, None] = None,
 ) -> FsiRunResult:
     latency = latency or LatencyModel()
     compute = compute or ComputeModel()
+    backend = get_backend(compute_backend)
     batch = x0.shape[1]
 
     # ---------------- Serial short-circuit ---------------------------------
     if channel == "serial" or P == 1:
         memory_mb = memory_mb or pricing.max_lambda_memory_mb
-        out, w = run_serial(net, x0, memory_mb=memory_mb, compute=compute)
+        out, w = run_serial(net, x0, memory_mb=memory_mb, compute=compute,
+                            backend=backend)
         w.charge_seconds(net.model_bytes / latency.weight_load_bandwidth)
         times = np.array([w.clock + latency.cold_start])
         stats = WorkloadStats(P=1, mean_runtime_s=float(times.mean()), memory_mb=memory_mb)
@@ -139,7 +144,14 @@ def run_fsi(
     if partition is None:
         partition = partition_network(net.layers, P, method=partition_method, seed=seed)
     plans = build_comm_plans(net.layers, partition)
-    artifacts = prepare_worker_artifacts(net.layers, partition, plans)
+    artifacts = prepare_worker_artifacts(net.layers, partition, plans,
+                                         backend=backend)
+    # Fleet batching (pallas-bsr): stack each layer's per-worker operands so
+    # one device dispatch serves all P workers; numpy backends return None.
+    fleet_states = backend.fleet_prepare_all(
+        [[artifacts[m].layers[k].state_for(backend) for m in range(P)]
+         for k in range(net.n_layers)]
+    )
 
     memory_mb = memory_mb or _default_memory_mb(net.neurons)
     for a in artifacts:
@@ -209,17 +221,28 @@ def run_fsi(
                     art, x_panels[m], workers[m], fabric, compute,
                     exploit_sparsity=exploit_sparsity,
                 ))
-        # Phase 2 — every worker drains its channel and finishes the layer.
+        # Phase 2 — every worker drains its channel, then the layer finishes:
+        # either per worker, or (fleet mode) with one batched device dispatch
+        # covering all P panels.  Billed charges are identical either way.
         for m in range(P):
             art = artifacts[m].layers[k]
             if channel == "queue":
-                x_panels[m] = fsi_queue_recv_and_finish(
-                    art, bufs[m], workers[m], fabric, compute, net.bias
-                )
+                bufs[m] = fsi_queue_recv(art, bufs[m], workers[m], fabric, compute)
             else:
-                x_panels[m] = fsi_object_recv_and_finish(
-                    art, bufs[m], workers[m], fabric, compute, net.bias
+                bufs[m] = fsi_object_recv(art, bufs[m], workers[m], fabric, compute)
+        if fleet_states is not None:
+            outs = backend.fleet_apply(fleet_states[k], bufs, net.bias)
+        else:
+            outs = [
+                backend.apply(
+                    artifacts[m].layers[k].state_for(backend), bufs[m], net.bias
                 )
+                for m in range(P)
+            ]
+        for m in range(P):
+            x_panels[m] = charge_finish(
+                artifacts[m].layers[k], bufs[m], outs[m], workers[m], compute
+            )
         # Straggler slowdown applies to *active* work (compute, pack/unpack)
         # via WorkerState.slowdown at the charge sites — never to channel
         # waits, which would compound across the fleet.

@@ -1,4 +1,10 @@
-"""Jitted public wrapper around the BSR SpMM Pallas kernel."""
+"""Jitted public wrappers around the BSR SpMM Pallas kernel.
+
+``bsr_spmm``       — one worker-layer dispatch (jit-cached per shape/bias).
+``bsr_spmm_fleet`` — the whole simulated fleet in one device dispatch: a
+                     vmap over a leading worker axis of stacked padded-BSR
+                     operands (see ``core.backends.PallasBsrBackend``).
+"""
 
 from __future__ import annotations
 
@@ -7,10 +13,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse import BSRMatrix, bsr_from_csr
+from repro.core.sparse import BSRMatrix
 from repro.kernels.bsr_spmm.bsr_spmm import bsr_spmm_fused
 
-__all__ = ["sparse_layer_apply", "prepare_bsr_operands", "bsr_spmm"]
+__all__ = ["sparse_layer_apply", "prepare_bsr_operands", "bsr_spmm",
+           "bsr_spmm_fleet"]
 
 
 def prepare_bsr_operands(bsr: BSRMatrix):
@@ -19,11 +26,25 @@ def prepare_bsr_operands(bsr: BSRMatrix):
     return jnp.asarray(blocks, jnp.float32), jnp.asarray(cols, jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("bias", "clip", "interpret"))
+@partial(jax.jit, static_argnames=("bias", "clip", "batch_block", "interpret"))
 def bsr_spmm(blocks, cols, x, *, bias: float, clip: float = 32.0,
-             interpret: bool = True):
+             batch_block: int = 128, interpret: bool = True):
     return bsr_spmm_fused(blocks, cols, x, bias=bias, clip=clip,
-                          interpret=interpret)
+                          batch_block=batch_block, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("bias", "clip", "batch_block", "interpret"))
+def bsr_spmm_fleet(blocks, cols, x, *, bias: float, clip: float = 32.0,
+                   batch_block: int = 128, interpret: bool = True):
+    """Batched dispatch: blocks [P, NBR, K, bm, bn], cols [P, NBR, K],
+    x [P, N, B] → y [P, NBR*bm, B].  One compile serves every layer when the
+    operands are padded to fleet-global maxima."""
+    return jax.vmap(
+        lambda b, c, xx: bsr_spmm_fused(
+            b, c, xx, bias=bias, clip=clip, batch_block=batch_block,
+            interpret=interpret,
+        )
+    )(blocks, cols, x)
 
 
 def sparse_layer_apply(bsr: BSRMatrix, x, bias: float, clip: float = 32.0,

@@ -268,6 +268,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         dt = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # jax ≤ 0.4.x: one dict per device
+            cost = cost[0] if cost else {}
         hlo_flops = float(cost.get("flops", 0.0)) / n_dev
         hlo_bytes = float(cost.get("bytes accessed", 0.0)) / n_dev
         # jaxpr-traced global flops (correct across scan bodies)

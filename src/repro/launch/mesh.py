@@ -16,19 +16,23 @@ import numpy as np
 __all__ = ["make_production_mesh", "make_mesh", "MeshAxes", "mesh_axes_of"]
 
 
+def _mesh_compat(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    if hasattr(jax.sharding, "AxisType"):  # jax ≥ 0.5: explicit axis types
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh_compat(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh (tests use small CPU meshes)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh_compat(shape, axes)
 
 
 class MeshAxes:

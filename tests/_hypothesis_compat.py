@@ -1,0 +1,71 @@
+"""Degrade gracefully when ``hypothesis`` is not installed.
+
+The property tests import ``given``/``settings``/``st`` from here instead of
+from ``hypothesis`` directly.  With hypothesis present this module is a pure
+re-export.  Without it, each ``@given`` collapses to a deterministic
+``pytest.mark.parametrize`` over a handful of seeded draws — the property
+still gets exercised (as a smoke test) rather than the whole module dying at
+collection, which is how the seed repo failed.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import zlib
+
+    import numpy as _np
+    import pytest as _pytest
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value))
+            )
+
+        @staticmethod
+        def sampled_from(items):
+            pool = list(items)
+            return _Strategy(lambda rng: pool[int(rng.integers(len(pool)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    st = _Strategies()
+
+    def settings(**_kwargs):
+        return lambda f: f
+
+    def given(**strategies):
+        def deco(f):
+            # seed from the test name so draws are stable across runs
+            rng = _np.random.default_rng(zlib.crc32(f.__name__.encode()))
+            names = list(strategies)
+            cases = [
+                tuple(strategies[n].example(rng) for n in names)
+                for _ in range(_FALLBACK_EXAMPLES)
+            ]
+            return _pytest.mark.parametrize(",".join(names), cases)(f)
+
+        return deco

@@ -1,0 +1,7 @@
+"""Test-suite bootstrap: make the tests directory importable (for the
+``_hypothesis_compat`` shim) regardless of pytest's import mode."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -12,10 +12,13 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytest.importorskip("jax")  # accelerator dep is optional for the numpy core
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.distributed.costing import collective_bytes, jaxpr_flops, traced_flops
 

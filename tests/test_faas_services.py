@@ -3,7 +3,7 @@ and MPI-style collectives."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.faas.collectives import all_reduce, barrier, broadcast, reduce_to_root
 from repro.faas.launch_tree import (

@@ -1,10 +1,13 @@
 """Per-kernel validation: pallas_call (interpret=True) vs ref.py oracles,
 swept over shapes and dtypes (assignment requirement)."""
 
+import pytest
+
+pytest.importorskip("jax")  # accelerator dep is optional for the numpy core
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.sparse import bsr_from_dense, random_sparse
 from repro.kernels.bsr_spmm.ops import prepare_bsr_operands, bsr_spmm

@@ -1,5 +1,9 @@
 """Sharding-rule unit tests (no devices needed — AbstractMesh)."""
 
+import pytest
+
+pytest.importorskip("jax")  # accelerator dep is optional for the numpy core
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,7 +22,10 @@ from repro.models.registry import cache_specs, get_model, input_specs
 
 
 def _mesh(shape=(16, 16), axes=("data", "model")):
-    return AbstractMesh(shape, axes)
+    try:  # jax ≥ 0.4.36: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:  # older signature: AbstractMesh(shape, axis_names)
+        return AbstractMesh(shape, axes)
 
 
 def _ax(mesh):
