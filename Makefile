@@ -1,24 +1,39 @@
 # Single entry point for the builder and CI.
 #
-#   make test         tier-1 suite (ROADMAP "Tier-1 verify")
+#   make test         tier-1 suite (ROADMAP "Tier-1 verify").  Includes the
+#                     backend parity harnesses: tests/test_backends.py (SpMM
+#                     compute backends) and tests/test_attention_backends.py
+#                     (decode-attention backends × model families × ragged
+#                     cache_len edges vs the dense-ref oracle).  Run one
+#                     harness alone with
+#                       make test PYTEST_ARGS=tests/test_attention_backends.py
 #   make bench-quick  CI-sized benchmark sweep + BENCH_fsi.json perf snapshot
+#                     (spmm_roofline_* + decode_attn_* rows per backend)
 #   make bench        full benchmark sweep
+#   make schema-check validate BENCH_fsi.json rows (name/us_per_call) so the
+#                     perf-trajectory tooling never breaks on a malformed row
 #   make lint         byte-compile + import-sanity over src/ (no external
 #                     linter dependency baked into the image)
 
 PY ?= python
+PYTEST_ARGS ?=
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench-quick bench lint
+.PHONY: test bench-quick bench schema-check lint
 
 test:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q $(PYTEST_ARGS)
 
 bench-quick:
 	$(PY) -m benchmarks.run --quick --json BENCH_fsi.json
+	$(PY) -m benchmarks.check_schema BENCH_fsi.json
 
 bench:
 	$(PY) -m benchmarks.run --json BENCH_fsi.json
+	$(PY) -m benchmarks.check_schema BENCH_fsi.json
+
+schema-check:
+	$(PY) -m benchmarks.check_schema BENCH_fsi.json
 
 lint:
 	$(PY) -m compileall -q src benchmarks tests

@@ -10,6 +10,11 @@ The ``spmm_roofline_*`` rows time one GraphChallenge butterfly layer through
 every compute backend formulation (seed ``np.add.at`` scatter, segment
 ``matmul_dense_fast``, Pallas BSR) and report achieved GFLOP/s — the perf
 trajectory future PRs regress against via ``benchmarks/run.py --json``.
+
+The ``decode_attn_*`` rows do the same for the serving engine's per-step
+decode attention across every registered ``AttentionBackend`` (dense-ref /
+chunked-lse / pallas-splitk), so ``BENCH_fsi.json`` tracks decode throughput
+per backend.
 """
 
 from __future__ import annotations
@@ -77,9 +82,57 @@ def spmm_roofline(neurons: int = 512, batch: int = 64,
     return rows
 
 
+def decode_attn_roofline(batch: int = 4, heads: int = 8, kv_heads: int = 2,
+                         seq: int = 1024, d_head: int = 64,
+                         repeats: int = 10) -> List[dict]:
+    """µs/step + achieved GFLOP/s for one decode-attention step through every
+    registered ``AttentionBackend`` (dense-ref oracle, chunked-LSE scan,
+    pallas-splitk kernel) — the serving engine's per-token hot path.  The
+    ragged ``cache_len`` is ~7/8 of capacity so masking is exercised."""
+    try:
+        import jax
+        import jax.numpy as jnp
+    except ModuleNotFoundError:
+        from repro.core.backends import ATTENTION_BACKEND_NAMES
+
+        return [dict(name=f"decode_attn_{n.replace('-', '_')}", us_per_call="",
+                     note="jax not installed") for n in ATTENTION_BACKEND_NAMES]
+
+    import numpy as np
+
+    from repro.core.backends import ATTENTION_BACKEND_NAMES, get_backend
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((batch, 1, heads, d_head)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((batch, seq, kv_heads, d_head)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((batch, seq, kv_heads, d_head)), jnp.bfloat16)
+    cache_len = jnp.asarray(seq - seq // 8, jnp.int32)
+    # qk^T + pv over the valid prefix, fp32 accumulation
+    flops = 2.0 * 2.0 * batch * heads * int(cache_len) * d_head
+    rows = []
+    for name in ATTENTION_BACKEND_NAMES:
+        be = get_backend("attention", name)
+        f = jax.jit(lambda cl, be=be: be.decode(q, k, v, cl))
+        np.asarray(f(cache_len))  # warmup: trace + compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            np.asarray(f(cache_len))
+        t = (time.perf_counter() - t0) / repeats
+        rows.append(dict(
+            name=f"decode_attn_{name.replace('-', '_')}",
+            us_per_call=round(t * 1e6, 1),
+            gflops=round(flops / t / 1e9, 3),
+            batch=batch, heads=heads, kv_heads=kv_heads, seq=seq,
+            d_head=d_head,
+        ))
+    return rows
+
+
 def run(sweep_json: str = SWEEP_JSON, neurons: int = 512,
         batch: int = 64) -> List[dict]:
     rows = spmm_roofline(neurons=neurons, batch=batch)
+    # CI-sized cache in --quick (neurons<=256), serving-sized otherwise
+    rows += decode_attn_roofline(seq=256 if neurons <= 256 else 1024)
     if not os.path.exists(sweep_json):
         rows.append(dict(name="roofline_missing",
                          note="run repro.launch.dryrun --all --both-meshes first"))

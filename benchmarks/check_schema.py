@@ -1,0 +1,87 @@
+"""Schema check for ``BENCH_fsi.json`` — the perf-trajectory artifact.
+
+Trajectory tooling diffs rows across PRs by ``name`` and reads the timing
+column, so a malformed row (missing name, non-numeric timing, duplicate name)
+must fail CI instead of silently corrupting the trend.  Rules:
+
+* the payload is ``{"meta": {...}, "rows": [...]}``;
+* every row is an object with a non-empty string ``name``, unique across rows;
+* a row's timing field — ``us_per_call`` or ``per_sample_ms`` — when present
+  must be numeric (or ``""`` with an explanatory ``note``, the "dependency
+  unavailable" convention);
+* benchmark families with a timing contract (``spmm_roofline_*``,
+  ``decode_attn_*``, ``fsi_*``) must carry a timing field.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.check_schema [BENCH_fsi.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+TIMING_FIELDS = ("us_per_call", "per_sample_ms")
+TIMED_PREFIXES = ("spmm_roofline_", "decode_attn_", "fsi_")
+
+
+def validate(payload) -> List[str]:
+    """Returns a list of human-readable problems (empty == valid)."""
+    problems: List[str] = []
+    if not isinstance(payload, dict):
+        return [f"payload must be an object, got {type(payload).__name__}"]
+    if not isinstance(payload.get("meta"), dict):
+        problems.append("missing/invalid 'meta' object")
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or not rows:
+        problems.append("missing/empty 'rows' list")
+        return problems
+    seen = set()
+    for i, row in enumerate(rows):
+        where = f"rows[{i}]"
+        if not isinstance(row, dict):
+            problems.append(f"{where}: not an object")
+            continue
+        name = row.get("name")
+        if not isinstance(name, str) or not name:
+            problems.append(f"{where}: missing/empty 'name'")
+            continue
+        if name in seen:
+            problems.append(f"{where}: duplicate name {name!r}")
+        seen.add(name)
+        timing = [f for f in TIMING_FIELDS if f in row]
+        for f in timing:
+            val = row[f]
+            if val == "":
+                if not row.get("note"):
+                    problems.append(
+                        f"{where} ({name}): empty {f} without a 'note'")
+            elif not isinstance(val, (int, float)) or isinstance(val, bool):
+                problems.append(
+                    f"{where} ({name}): non-numeric {f}={val!r}")
+        if not timing and name.startswith(TIMED_PREFIXES):
+            problems.append(f"{where} ({name}): timed family without "
+                            f"any of {TIMING_FIELDS}")
+    return problems
+
+
+def main(argv=None) -> int:
+    path = (argv or sys.argv[1:] or ["BENCH_fsi.json"])[0]
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable ({e})", file=sys.stderr)
+        return 2
+    problems = validate(payload)
+    for p in problems:
+        print(f"{path}: {p}", file=sys.stderr)
+    if not problems:
+        print(f"{path}: {len(payload['rows'])} rows ok")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,8 @@
-"""Pluggable worker compute backends for the FSI per-layer SpMM hot path.
+"""Pluggable backends for the two serving hot paths: worker SpMM and decode
+attention.
 
-Every simulated Lambda executes the same inner loop per layer: a sparse
+**Compute backends** (:class:`ComputeBackend`) execute the FSI per-layer
+SpMM.  Every simulated Lambda runs the same inner loop per layer: a sparse
 matrix–panel product ``z = W_local @ x_buf`` followed by the GraphChallenge
 epilogue ``y = clip(relu(z + bias), 0, 32)``.  The *billed* cost of that work
 is fixed by :class:`repro.faas.worker.ComputeModel` (FLOPs → Lambda-seconds),
@@ -22,6 +24,27 @@ Backends only change how the arithmetic is executed — FLOP charging, message
 accounting and memory high-water marks are computed by the caller from the
 CSR shard itself, so billed cost is identical across backends by
 construction (asserted in ``tests/test_backends.py``).
+
+**Attention backends** (:class:`AttentionBackend`) execute the serving
+engine's per-step decode attention — the second hot path under the paper's
+batch-serving posture (§V-B).  Every decoding model family dispatches its
+single-token attention through one of:
+
+* ``dense-ref``     — ``models.attention.decode_attention_dense``, the
+  no-chunking oracle (sequence-shardable under pjit);
+* ``chunked-lse``   — the streaming ``models.attention.decode_attention``
+  scan (bounded memory for very long caches);
+* ``pallas-splitk`` — the split-KV Pallas kernel ``kernels/decode_attention``
+  via the jit-cached ``decode_mha`` wrapper, with the cache padded to a
+  ``block_k`` multiple picked from an autotune table.
+
+All three take ``(q [B,1,H,D], k_cache [B,S,KV,D], v_cache [B,S,KV,D],
+cache_len)`` and return ``[B,1,H,D]`` in ``q.dtype``; logits parity across
+backends and model families is asserted in ``tests/test_attention_backends.py``.
+
+Both registries resolve through one entry point: ``get_backend(kind, name)``
+with ``kind in {"compute", "attention"}``; the legacy one-argument form
+``get_backend(name)`` keeps meaning a compute backend.
 """
 
 from __future__ import annotations
@@ -39,7 +62,12 @@ __all__ = [
     "NumpyCsrBackend",
     "NumpyFastBackend",
     "PallasBsrBackend",
+    "AttentionBackend",
+    "DenseRefAttention",
+    "ChunkedLseAttention",
+    "PallasSplitKAttention",
     "BACKEND_NAMES",
+    "ATTENTION_BACKEND_NAMES",
     "get_backend",
 ]
 
@@ -260,6 +288,144 @@ class PallasBsrBackend:
         return [y[i, : fleet_state.m[i]] for i in range(P)]
 
 
+# ---------------------------------------------------------------------------
+# decode-attention backends (serving per-step hot path)
+# ---------------------------------------------------------------------------
+
+
+class AttentionBackend(Protocol):
+    """Single-token decode attention over a preallocated KV cache.
+
+    Implementations must be pure jax-traceable callables so the serving
+    engine can close over one instance inside its jitted ``decode_step``:
+    the backend choice is static, ``cache_len`` is traced.
+    """
+
+    name: str
+
+    def decode(
+        self,
+        q: Any,          # [B, 1, H, D] — one new token's query heads
+        k_cache: Any,    # [B, S, KV, D] cache padded to capacity S
+        v_cache: Any,    # [B, S, KV, D]
+        cache_len: Any,  # valid prefix length (traced scalar or int)
+    ) -> Any:
+        """Returns attention output [B, 1, H, D] in ``q.dtype``."""
+        ...
+
+
+class DenseRefAttention:
+    """``decode_attention_dense`` — the parity oracle for the registry.
+
+    No chunking: the scores einsum contracts the full (masked) cache, which
+    is also the sequence-shardable formulation under pjit (split-KV chosen by
+    the compiler).
+    """
+
+    name = "dense-ref"
+
+    @property
+    def state_key(self) -> str:
+        return self.name
+
+    def decode(self, q, k_cache, v_cache, cache_len):
+        from repro.models.attention import decode_attention_dense
+
+        return decode_attention_dense(q, k_cache, v_cache, cache_len)
+
+
+class ChunkedLseAttention:
+    """Streaming KV-chunk scan with running (max, sum, acc) — bounded memory
+    for very long caches; chunk size is a numerics-invariant tile knob
+    (property-tested in ``tests/test_attention_backends.py``)."""
+
+    name = "chunked-lse"
+
+    def __init__(self, kv_chunk: int = 2048):
+        self.kv_chunk = kv_chunk
+
+    @property
+    def state_key(self) -> str:
+        return f"{self.name}:kc{self.kv_chunk}"
+
+    def decode(self, q, k_cache, v_cache, cache_len):
+        from repro.models.attention import decode_attention
+
+        return decode_attention(
+            q, k_cache, v_cache, cache_len=cache_len, kv_chunk=self.kv_chunk
+        ).astype(q.dtype)
+
+
+# (padded cache length upper bound, block_k) — smallest block that keeps the
+# kv sweep ≥ a few blocks deep without padding tiny caches to 512.
+SPLITK_BLOCK_K_TABLE: Tuple[Tuple[Optional[int], int], ...] = (
+    (256, 64),
+    (1024, 128),
+    (4096, 256),
+    (None, 512),
+)
+
+
+class PallasSplitKAttention:
+    """Split-KV flash-decode Pallas kernel via the jit-cached ``decode_mha``.
+
+    The cache capacity ``S`` is padded up to a multiple of ``block_k`` (the
+    kernel requires ``block_k | S``); padded positions sit beyond
+    ``cache_len`` so the in-kernel mask zeroes them.  ``block_k`` comes from
+    :data:`SPLITK_BLOCK_K_TABLE` unless pinned, and ``interpret=None`` defers
+    to the platform default (compiled on TPU, interpreter elsewhere).  Since
+    ``S`` is fixed for the lifetime of a cache, the jit cache is hit on every
+    step while ``cache_len`` grows (asserted in the parity harness).
+    """
+
+    name = "pallas-splitk"
+
+    def __init__(self, block_k: Optional[int] = None,
+                 interpret: Optional[bool] = None):
+        import jax  # gate the optional accelerator dep at construction time
+
+        del jax
+        self.block_k = block_k
+        self.interpret = interpret
+
+    @property
+    def state_key(self) -> str:
+        return f"{self.name}:bk{self.block_k}:i{self.interpret}"
+
+    def block_k_for(self, seq_cap: int) -> int:
+        if self.block_k is not None:
+            return self.block_k
+        for bound, bk in SPLITK_BLOCK_K_TABLE:
+            if bound is None or seq_cap <= bound:
+                return bk
+        raise AssertionError("unreachable")  # pragma: no cover
+
+    def decode(self, q, k_cache, v_cache, cache_len):
+        import jax.numpy as jnp
+
+        from repro.kernels.decode_attention.ops import decode_mha
+
+        S = k_cache.shape[1]
+        bk = self.block_k_for(S)
+        pad = -(-S // bk) * bk - S
+        kT = jnp.moveaxis(k_cache, 1, 2)        # [B, KV, S, D]
+        vT = jnp.moveaxis(v_cache, 1, 2)
+        if pad:
+            widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+            kT = jnp.pad(kT, widths)
+            vT = jnp.pad(vT, widths)
+        out, _ = decode_mha(
+            q[:, 0], kT, vT, jnp.asarray(cache_len, jnp.int32),
+            block_k=bk, interpret=self.interpret,
+        )
+        return out[:, None].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# unified registry
+# ---------------------------------------------------------------------------
+
+
 _REGISTRY: Dict[str, type] = {
     NumpyCsrBackend.name: NumpyCsrBackend,
     NumpyFastBackend.name: NumpyFastBackend,
@@ -267,24 +433,60 @@ _REGISTRY: Dict[str, type] = {
 }
 BACKEND_NAMES = tuple(_REGISTRY)
 
+_ATTENTION_REGISTRY: Dict[str, type] = {
+    DenseRefAttention.name: DenseRefAttention,
+    ChunkedLseAttention.name: ChunkedLseAttention,
+    PallasSplitKAttention.name: PallasSplitKAttention,
+}
+ATTENTION_BACKEND_NAMES = tuple(_ATTENTION_REGISTRY)
 
-def get_backend(backend: Union[str, ComputeBackend, None]) -> ComputeBackend:
-    """Resolve a backend name (or pass an instance through).
+# kind → (registry, default name, label, duck-type method an instance of the
+# kind must expose — catches a wrong-kind instance at resolution time instead
+# of an AttributeError deep inside a jit trace)
+_KINDS = {
+    "compute": (_REGISTRY, "numpy-fast", "compute backend", "apply"),
+    "attention": (_ATTENTION_REGISTRY, "dense-ref", "attention backend",
+                  "decode"),
+}
 
-    ``None`` resolves to ``numpy-fast``, the default since PR 1.
+_LEGACY = object()  # sentinel: one-argument get_backend(name) = compute
+
+
+def get_backend(kind, name=_LEGACY):
+    """Resolve a backend by ``(kind, name)`` — the single entry point for
+    both registries.
+
+    ``get_backend("compute", "numpy-fast")`` / ``get_backend("attention",
+    "pallas-splitk")``.  ``name=None`` resolves to the kind's default
+    (``numpy-fast`` — the default since PR 1 — and ``dense-ref``, the
+    oracle).  Instances pass through unchanged, so callers can hand in a
+    pre-configured backend (e.g. ``ChunkedLseAttention(kv_chunk=256)``).
+
+    The legacy one-argument form ``get_backend(name_or_instance)`` still
+    means a compute backend (every PR 1 call site).
     """
-    if backend is None:
-        backend = "numpy-fast"
-    if isinstance(backend, str):
-        try:
-            return _REGISTRY[backend]()
-        except KeyError:
-            raise ValueError(
-                f"unknown compute backend {backend!r}; options: {BACKEND_NAMES}"
-            ) from None
-        except ImportError as e:  # pallas-bsr without jax installed
-            raise ImportError(
-                f"backend {backend!r} needs jax; install it or use "
-                f"'numpy-fast'"
-            ) from e
-    return backend
+    if name is _LEGACY:
+        kind, name = "compute", kind
+    if kind not in _KINDS:
+        raise ValueError(
+            f"unknown backend kind {kind!r}; options: {tuple(_KINDS)}"
+        )
+    registry, default, label, duck_method = _KINDS[kind]
+    if name is None:
+        name = default
+    if not isinstance(name, str):
+        if not callable(getattr(name, duck_method, None)):
+            raise TypeError(
+                f"{name!r} is not a {label}: missing .{duck_method}()"
+            )
+        return name
+    try:
+        return registry[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown {label} {name!r}; options: {tuple(registry)}"
+        ) from None
+    except ImportError as e:  # pallas-* without jax installed
+        raise ImportError(
+            f"backend {name!r} needs jax; install it or use {default!r}"
+        ) from e

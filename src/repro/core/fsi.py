@@ -319,8 +319,8 @@ def fsi_queue_recv(
     # messages ... using message attributes"), since activation sparsity
     # makes the delivered row count data-dependent.
     pending = set(art.recv_expect)  # sources that will definitely send
+    seen_chunks: set[tuple[int, int]] = set()  # (src, seq) — dedupe redeliveries
     got_chunks: Dict[int, int] = {}
-    total_chunks: Dict[int, int] = {}
     while pending:
         now, deliveries = fabric.poll(worker.rank, worker.abs_time, long_poll=True)
         worker.advance_to_abs(now)
@@ -330,14 +330,25 @@ def fsi_queue_recv(
             worker.charge_seconds(len(d.blob) / compute.unpack_bandwidth * worker.slowdown)
             worker.messages_received += 1
             worker.bytes_received += len(d.blob)
+            receipts.append(d.receipt)
             if layer != art.layer:
+                if layer < art.layer:
+                    # stale redelivery of an already-completed layer's chunk
+                    # (at-least-once): retire the receipt, touch nothing
+                    continue
                 raise AssertionError("cross-layer message leakage")
+            # SQS is at-least-once: the same (src, seq) chunk may be
+            # redelivered.  Writes are idempotent (row-addressed assignment),
+            # but completion counting must not be — a duplicate counted
+            # toward ``total`` would retire the source before its remaining
+            # chunks arrive.
+            if (src, seq) in seen_chunks:
+                continue
+            seen_chunks.add((src, seq))
             if rows.size:
                 pos = np.searchsorted(art.needed_rows, rows)
                 x_buf[pos] = vals
             got_chunks[src] = got_chunks.get(src, 0) + 1
-            total_chunks[src] = total
-            receipts.append(d.receipt)
             if src in pending and got_chunks[src] >= total:
                 pending.discard(src)
         if receipts:

@@ -62,9 +62,14 @@ def decode_attention(
     v_cache: jnp.ndarray,  # [B, KV, S, D]
     cache_len: jnp.ndarray,  # int32 [] — valid prefix
     block_k: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
-    """Returns (out [B, H, D], lse [B, H]) — normalized partials + lse."""
+    """Returns (out [B, H, D], lse [B, H]) — normalized partials + lse.
+
+    ``interpret=None`` resolves from the platform (interpreter off-TPU only).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, H, D = q.shape
     KV, S = k_cache.shape[1], k_cache.shape[2]
     G = H // KV

@@ -16,11 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.backends import get_backend
 from repro.models import layers as L
-from repro.models.attention import (
-    chunked_causal_attention,
-    decode_attention_dense,
-)
+from repro.models.attention import chunked_causal_attention
 
 PyTree = Any
 ACC = jnp.float32
@@ -180,7 +178,8 @@ def prefill(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
 
 
 def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
-                cfg: ModelConfig) -> Tuple[jnp.ndarray, PyTree]:
+                cfg: ModelConfig, attn_backend=None) -> Tuple[jnp.ndarray, PyTree]:
+    attn = get_backend("attention", attn_backend)
     x = L.embed_tokens(params["embed"], token)
     B = x.shape[0]
     pos = cache["length"]
@@ -196,13 +195,12 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
             kc_self, k.astype(kc_self.dtype), (0, pos, 0, 0))
         vc_self = jax.lax.dynamic_update_slice(
             vc_self, v.astype(vc_self.dtype), (0, pos, 0, 0))
-        o = decode_attention_dense(q, kc_self, vc_self, cache_len=pos + 1)
+        o = attn.decode(q, kc_self, vc_self, cache_len=pos + 1)
         h = h + L.out_project(blk["self_attn"], o.astype(h.dtype), h.dtype)
         c = L.rms_norm(h, blk["ln_cross"], cfg.norm_eps)
         qc = jnp.einsum("bsd,dhk->bshk", c, blk["cross_attn"]["wq"],
                         preferred_element_type=ACC).astype(h.dtype)
-        oc = decode_attention_dense(qc, kc_cross, vc_cross,
-                                    cache_len=kc_cross.shape[1])
+        oc = attn.decode(qc, kc_cross, vc_cross, cache_len=kc_cross.shape[1])
         h = h + L.out_project(blk["cross_attn"], oc.astype(h.dtype), h.dtype)
         m = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
         h = h + L.mlp(blk["mlp"], m)

@@ -22,12 +22,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.backends import get_backend
 from repro.models import layers as L
 from repro.models import mamba2 as M2
-from repro.models.attention import (
-    chunked_causal_attention,
-    decode_attention_dense,
-)
+from repro.models.attention import chunked_causal_attention
 
 PyTree = Any
 ACC = jnp.float32
@@ -138,7 +136,9 @@ def shared_block_prefill(shared, h, emb, cfg, positions, max_len):
     return h2, (k_pad, v_pad)
 
 
-def shared_block_decode(shared, h, emb, cfg, positions, k_cache, v_cache, pos):
+def shared_block_decode(shared, h, emb, cfg, positions, k_cache, v_cache, pos,
+                        attn=None):
+    attn = attn if attn is not None else get_backend("attention", None)
     xin = jnp.concatenate([h, emb], axis=-1)
     a = L.rms_norm(xin, shared["ln_attn"], cfg.norm_eps)
     q, k, v = L.qkv_project(shared["attn"], a)
@@ -148,7 +148,7 @@ def shared_block_decode(shared, h, emb, cfg, positions, k_cache, v_cache, pos):
                                            (0, pos, 0, 0))
     v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
                                            (0, pos, 0, 0))
-    o = decode_attention_dense(q, k_cache, v_cache, cache_len=pos + 1)
+    o = attn.decode(q, k_cache, v_cache, cache_len=pos + 1)
     h2 = h + L.out_project(shared["attn"], o.astype(h.dtype), h.dtype)
     m = L.rms_norm(jnp.concatenate([h2, emb], axis=-1), shared["ln_mlp"],
                    cfg.norm_eps)
@@ -261,7 +261,8 @@ def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
 
 
 def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
-                cfg: ModelConfig) -> Tuple[jnp.ndarray, PyTree]:
+                cfg: ModelConfig, attn_backend=None) -> Tuple[jnp.ndarray, PyTree]:
+    attn = get_backend("attention", attn_backend)
     emb = L.embed_tokens(params["embed"], token)
     x = emb
     B = x.shape[0]
@@ -271,7 +272,7 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
     def group_body(h, inp):
         group_blocks, (kc, vc), (conv_s, ssm_s) = inp
         h, (kc, vc) = shared_block_decode(params["shared"], h, emb, cfg,
-                                          positions, kc, vc, pos)
+                                          positions, kc, vc, pos, attn=attn)
 
         def mamba_body(hh, blk_state):
             blk, cs, ss = blk_state
@@ -289,7 +290,8 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
     tail_kv, tail_state = cache.get("tail_kv"), cache.get("tail_state")
     if params.get("tail") is not None:
         x, tail_kv = shared_block_decode(params["shared"], x, emb, cfg,
-                                         positions, tail_kv[0], tail_kv[1], pos)
+                                         positions, tail_kv[0], tail_kv[1], pos,
+                                         attn=attn)
 
         def mamba_body(hh, blk_state):
             blk, cs, ss = blk_state

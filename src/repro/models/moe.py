@@ -28,11 +28,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.backends import get_backend
 from repro.models import layers as L
-from repro.models.attention import (
-    chunked_causal_attention,
-    decode_attention_dense,
-)
+from repro.models.attention import chunked_causal_attention
 from repro.models import transformer as TF
 
 PyTree = Any
@@ -417,7 +415,9 @@ def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
 
 
 def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
-                cfg: ModelConfig, dp_groups: int = 1) -> Tuple[jnp.ndarray, PyTree]:
+                cfg: ModelConfig, dp_groups: int = 1,
+                attn_backend=None) -> Tuple[jnp.ndarray, PyTree]:
+    attn = get_backend("attention", attn_backend)
     x = L.embed_tokens(params["embed"], token)
     B = x.shape[0]
     pos = cache["length"]
@@ -435,7 +435,7 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
                 k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
             v_cache = jax.lax.dynamic_update_slice(
                 v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
-            o = decode_attention_dense(q, k_cache, v_cache, cache_len=pos + 1)
+            o = attn.decode(q, k_cache, v_cache, cache_len=pos + 1)
             h = h + L.out_project(blk["attn"], o.astype(h.dtype), h.dtype)
             hm = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
             if blk.get("mlp") is not None:

@@ -32,8 +32,18 @@ class ModelApi:
     decode_step: Callable[..., Tuple[jnp.ndarray, PyTree]]
 
 
-def get_model(cfg: ModelConfig) -> ModelApi:
+def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
+    """Build the family's :class:`ModelApi`.
+
+    ``attn_backend`` — :class:`repro.core.backends.AttentionBackend` name or
+    instance used by every decode step of the attention-bearing families
+    (``None`` → ``dense-ref``, the oracle).  Resolved once here so all jitted
+    decode closures share a single static instance.
+    """
+    from repro.core.backends import get_backend
+
     fam = cfg.family
+    attn = get_backend("attention", attn_backend) if fam != "ssm" else None
     if fam in ("dense",):
         return ModelApi(
             cfg=cfg,
@@ -42,7 +52,8 @@ def get_model(cfg: ModelConfig) -> ModelApi:
             forward=lambda p, b: transformer.forward(p, b["tokens"], cfg),
             prefill=lambda p, b, max_len: transformer.prefill(
                 p, b["tokens"], cfg, max_len),
-            decode_step=lambda p, t, c: transformer.decode_step(p, t, c, cfg),
+            decode_step=lambda p, t, c: transformer.decode_step(
+                p, t, c, cfg, attn_backend=attn),
         )
     if fam == "vlm":
         return ModelApi(
@@ -53,7 +64,8 @@ def get_model(cfg: ModelConfig) -> ModelApi:
                 p, b["tokens"], cfg, extra_embeds=b["extra_embeds"]),
             prefill=lambda p, b, max_len: transformer.prefill(
                 p, b["tokens"], cfg, max_len, extra_embeds=b["extra_embeds"]),
-            decode_step=lambda p, t, c: transformer.decode_step(p, t, c, cfg),
+            decode_step=lambda p, t, c: transformer.decode_step(
+                p, t, c, cfg, attn_backend=attn),
         )
     if fam == "moe":
         return ModelApi(
@@ -65,7 +77,7 @@ def get_model(cfg: ModelConfig) -> ModelApi:
             prefill=lambda p, b, max_len, dp_groups=1: moe.prefill(
                 p, b["tokens"], cfg, max_len, dp_groups),
             decode_step=lambda p, t, c, dp_groups=1: moe.decode_step(
-                p, t, c, cfg, dp_groups),
+                p, t, c, cfg, dp_groups, attn_backend=attn),
         )
     if fam == "ssm":
         return ModelApi(
@@ -84,7 +96,8 @@ def get_model(cfg: ModelConfig) -> ModelApi:
             loss_fn=lambda p, b: hybrid.loss_fn(p, b, cfg),
             forward=lambda p, b: hybrid.forward(p, b["tokens"], cfg),
             prefill=lambda p, b, max_len: hybrid.prefill(p, b["tokens"], cfg, max_len),
-            decode_step=lambda p, t, c: hybrid.decode_step(p, t, c, cfg),
+            decode_step=lambda p, t, c: hybrid.decode_step(
+                p, t, c, cfg, attn_backend=attn),
         )
     if fam == "encdec":
         return ModelApi(
@@ -93,7 +106,8 @@ def get_model(cfg: ModelConfig) -> ModelApi:
             loss_fn=lambda p, b: encdec.loss_fn(p, b, cfg),
             forward=lambda p, b: encdec.forward(p, b, cfg),
             prefill=lambda p, b, max_len: encdec.prefill(p, b, cfg, max_len),
-            decode_step=lambda p, t, c: encdec.decode_step(p, t, c, cfg),
+            decode_step=lambda p, t, c: encdec.decode_step(
+                p, t, c, cfg, attn_backend=attn),
         )
     raise ValueError(fam)
 

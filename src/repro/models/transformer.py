@@ -20,12 +20,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.backends import get_backend
 from repro.models import layers as L
 from repro.models.attention import (
     chunked_causal_attention,
     combine_split_kv,
     decode_attention,
-    decode_attention_dense,
 )
 
 PyTree = Any
@@ -166,14 +166,19 @@ def prefill(
 
 def decode_step(
     params: PyTree, token: jnp.ndarray, cache: PyTree, cfg: ModelConfig,
-    *, seq_shard_axes=None,
+    *, seq_shard_axes=None, attn_backend=None,
 ) -> Tuple[jnp.ndarray, PyTree]:
     """One decode step.  token [B, 1] → logits [B, 1, V].
 
     ``seq_shard_axes``: mesh axis name(s) the KV cache's sequence dim is
     sharded over — partial attention outputs are lse-combined across them
     (split-KV decode).  None means the cache is sequence-replicated locally.
+
+    ``attn_backend``: :class:`repro.core.backends.AttentionBackend` name or
+    instance for the local (sequence-replicated) attention dispatch; ``None``
+    resolves to ``dense-ref``, the oracle.
     """
+    attn = get_backend("attention", attn_backend)
     x = L.embed_tokens(params["embed"], token)
     B = x.shape[0]
     pos = cache["length"]
@@ -191,7 +196,7 @@ def decode_step(
                 k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
             v_cache = jax.lax.dynamic_update_slice(
                 v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
-            o = decode_attention_dense(q, k_cache, v_cache, cache_len=pos + 1)
+            o = attn.decode(q, k_cache, v_cache, cache_len=pos + 1)
         else:
             # sequence-sharded cache: the new token's KV lands on the shard
             # owning position `pos`; handled by the distributed wrapper.

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.backends import get_backend
 from repro.models.registry import get_model
 
 PyTree = Any
@@ -34,9 +35,19 @@ class GenerationResult:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Optional[PyTree] = None,
-                 seed: int = 0):
+                 seed: int = 0, attn_backend=None, max_len_hint: int = 0):
+        """``attn_backend``: decode-attention backend name/instance routed to
+        every model family's decode step (``repro.core.backends``).  ``None``
+        keeps the ``dense-ref`` oracle; ``"auto"`` asks the router to pick
+        from the platform and ``max_len_hint`` (expected cache capacity)."""
         self.cfg = cfg
-        self.model = get_model(cfg)
+        if attn_backend == "auto":
+            from repro.serving.router import route_attention_backend
+
+            attn_backend = route_attention_backend(
+                cfg, max_len=max_len_hint or None)
+        self.attn_backend = get_backend("attention", attn_backend)
+        self.model = get_model(cfg, attn_backend=self.attn_backend)
         self.params = params if params is not None else self.model.init(
             jax.random.key(seed))
         self._prefill = jax.jit(self.model.prefill, static_argnums=(2,))

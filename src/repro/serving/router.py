@@ -14,7 +14,7 @@ priority) the router picks:
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Tuple
+from typing import Literal, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.cost_model import TPU_V5E, recommend_configuration
@@ -41,6 +41,34 @@ def route_serverless(model_bytes: int, per_layer_exchange_bytes: float,
         memory_mb_per_worker=memory_mb,
     )
     return ServerlessRoute(channel=ch, workers=p)
+
+
+def route_attention_backend(cfg: ModelConfig, max_len: Optional[int] = None,
+                            platform: Optional[str] = None) -> str:
+    """Pick the decode-attention backend for a serving configuration.
+
+    The same smallest-thing-that-meets-the-profile logic as the channel /
+    slice choices, applied to the per-step attention dispatch:
+
+    * TPU → ``pallas-splitk`` (compiled split-KV kernel, MXU dispatch);
+    * long caches off-TPU → ``chunked-lse`` (the dense oracle materializes a
+      [B, H, S] score row per step; the streaming scan bounds that);
+    * otherwise → ``dense-ref`` (cheapest to trace, oracle-exact).
+
+    ``platform`` defaults to ``jax.default_backend()``; SSM families have no
+    decode attention and always get the oracle (unused).
+    """
+    if cfg.is_attention_free:
+        return "dense-ref"
+    if platform is None:
+        import jax
+
+        platform = jax.default_backend()
+    if platform == "tpu":
+        return "pallas-splitk"
+    if max_len is not None and max_len > 4096:
+        return "chunked-lse"
+    return "dense-ref"
 
 
 def route_tpu(cfg: ModelConfig, shape: ShapeConfig,

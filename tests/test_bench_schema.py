@@ -1,0 +1,81 @@
+"""BENCH_fsi.json schema guard — trajectory tooling reads (name,
+us_per_call) per row; a malformed row must be caught here / in CI, not when
+a later PR tries to diff the trend."""
+
+import json
+import os
+
+import pytest
+
+from benchmarks.check_schema import validate
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_fsi.json")
+
+
+def _payload():
+    # the artifact is generated (gitignored): absent on a fresh clone until
+    # `make bench-quick` runs — CI orders the bench sweep after this suite
+    if not os.path.exists(BENCH_JSON):
+        pytest.skip("BENCH_fsi.json not generated yet (run make bench-quick)")
+    with open(BENCH_JSON) as f:
+        return json.load(f)
+
+
+class TestCommittedArtifact:
+    def test_committed_bench_json_validates(self):
+        assert validate(_payload()) == []
+
+    def test_decode_attn_rows_present_per_backend(self):
+        """Acceptance: ≥ 1 decode_attn_* row per registered attention
+        backend, each carrying a numeric us_per_call."""
+        from repro.core.backends import ATTENTION_BACKEND_NAMES
+
+        rows = {r["name"]: r for r in _payload()["rows"]}
+        for name in ATTENTION_BACKEND_NAMES:
+            row = rows.get(f"decode_attn_{name.replace('-', '_')}")
+            assert row is not None, f"no decode_attn row for {name}"
+            assert isinstance(row["us_per_call"], (int, float))
+
+
+class TestValidator:
+    BASE = {"meta": {"quick": True}, "rows": [
+        {"name": "fsi_serial", "per_sample_ms": 1.25},
+        {"name": "decode_attn_dense_ref", "us_per_call": 10.0},
+        {"name": "launch_P8", "tree_s": 0.5},
+    ]}
+
+    def test_accepts_well_formed(self):
+        assert validate(self.BASE) == []
+
+    def test_rejects_missing_name(self):
+        bad = json.loads(json.dumps(self.BASE))
+        del bad["rows"][0]["name"]
+        assert any("missing/empty 'name'" in p for p in validate(bad))
+
+    def test_rejects_duplicate_name(self):
+        bad = json.loads(json.dumps(self.BASE))
+        bad["rows"].append({"name": "fsi_serial", "per_sample_ms": 2.0})
+        assert any("duplicate name" in p for p in validate(bad))
+
+    def test_rejects_non_numeric_timing(self):
+        bad = json.loads(json.dumps(self.BASE))
+        bad["rows"][1]["us_per_call"] = "fast"
+        assert any("non-numeric" in p for p in validate(bad))
+
+    def test_rejects_timed_family_without_timing(self):
+        bad = json.loads(json.dumps(self.BASE))
+        bad["rows"][1] = {"name": "decode_attn_dense_ref", "gflops": 1.0}
+        assert any("timed family" in p for p in validate(bad))
+
+    def test_allows_empty_timing_with_note(self):
+        ok = json.loads(json.dumps(self.BASE))
+        ok["rows"].append({"name": "spmm_roofline_pallas_bsr",
+                           "us_per_call": "", "note": "jax not installed"})
+        assert validate(ok) == []
+        bad = json.loads(json.dumps(self.BASE))
+        bad["rows"].append({"name": "spmm_roofline_pallas_bsr",
+                            "us_per_call": ""})
+        assert any("without a 'note'" in p for p in validate(bad))
+
+    def test_rejects_empty_rows(self):
+        assert any("rows" in p for p in validate({"meta": {}, "rows": []}))

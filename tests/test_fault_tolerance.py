@@ -1,6 +1,8 @@
 """Fault tolerance: checkpoint/restart determinism, elastic resharding,
-async save integrity, gradient compression convergence."""
+async save integrity, gradient compression convergence, and FaaS channel
+failure paths (duplicate delivery / out-of-order chunk arrival)."""
 
+import dataclasses
 import os
 import subprocess
 import sys
@@ -222,3 +224,192 @@ class TestCompressedPsum:
                              capture_output=True, text=True, cwd="/root/repo",
                              timeout=300)
         assert "PSUM_OK" in out.stdout, out.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# FaaS channel failure paths: duplicate delivery + out-of-order arrival
+# ---------------------------------------------------------------------------
+
+from repro.core.cost_model import AWS_PRICING
+from repro.core.fsi import (
+    finish_layer,
+    fsi_object_recv,
+    fsi_object_send_and_local,
+    fsi_queue_recv,
+    fsi_queue_send_and_local,
+    prepare_worker_artifacts,
+)
+from repro.core.partitioner import partition_network
+from repro.core.send_recv import build_comm_plans
+from repro.data.graphchallenge import dense_inference, make_inputs, make_sparse_dnn
+from repro.faas.object_service import ObjectFabric
+from repro.faas.queue_service import QueueFabric
+from repro.faas.worker import ComputeModel, WorkerState
+
+# tiny cap forces multi-chunk sends so chunk ordering/duplication matters
+SMALL_PRICING = dataclasses.replace(AWS_PRICING, max_publish_payload=1600)
+
+
+class DuplicatingQueueFabric(QueueFabric):
+    """At-least-once SQS: every published message is delivered twice, the
+    duplicate arriving later (visibility-timeout style redelivery)."""
+
+    def publish_batch(self, topic, entries, at_time):
+        done = super().publish_batch(topic, entries, at_time)
+        return super().publish_batch(topic, entries, done + 0.5)
+
+
+class ReorderingQueueFabric(QueueFabric):
+    """Deliveries within a poll window come back in reverse order."""
+
+    def poll(self, worker, at_time, long_poll=True, max_messages=10):
+        now, msgs = super().poll(worker, at_time, long_poll, max_messages)
+        return now, list(reversed(msgs))
+
+
+class DuplicatingReorderingQueueFabric(DuplicatingQueueFabric,
+                                       ReorderingQueueFabric):
+    pass
+
+
+class DuplicatingObjectFabric(ObjectFabric):
+    """Every object is PUT twice (idempotent overwrite of the same key) and
+    LISTed twice (eventual-consistency style duplicate listing)."""
+
+    def put_obj(self, layer, src, target, blob, at_time):
+        done = super().put_obj(layer, src, target, blob, at_time)
+        return super().put_obj(layer, src, target, blob, done)
+
+    def list_files(self, layer, worker, at_time):
+        now, handles = super().list_files(layer, worker, at_time)
+        return now, handles + handles
+
+
+class ReorderingObjectFabric(ObjectFabric):
+    """LIST returns handles in reverse key order and multipart objects carry
+    their chunks in reverse arrival order."""
+
+    def put_multipart(self, layer, src, target, blobs, at_time):
+        return super().put_multipart(layer, src, target,
+                                     list(reversed(blobs)), at_time)
+
+    def list_files(self, layer, worker, at_time):
+        now, handles = super().list_files(layer, worker, at_time)
+        return now, list(reversed(handles))
+
+
+QUEUE_FAULTS = {
+    "duplicate": DuplicatingQueueFabric,
+    "out-of-order": ReorderingQueueFabric,
+    "duplicate+out-of-order": DuplicatingReorderingQueueFabric,
+}
+OBJECT_FAULTS = {
+    "duplicate": DuplicatingObjectFabric,
+    "out-of-order": ReorderingObjectFabric,
+}
+
+
+class TestChannelFailurePaths:
+    """Payload reassembly must be idempotent: the FSI recv loops key every
+    write by global row id and every completion by (src, seq), so redelivered
+    or reordered chunks change nothing but billing noise."""
+
+    P = 3
+
+    @pytest.fixture(scope="class")
+    def case(self):
+        net = make_sparse_dnn(64, n_layers=2, seed=5)
+        x0 = make_inputs(64, 12, seed=6)
+        partition = partition_network(net.layers, self.P, method="hgp", seed=0)
+        plans = build_comm_plans(net.layers, partition)
+        artifacts = prepare_worker_artifacts(net.layers, partition, plans)
+        return net, x0, artifacts, dense_inference(net, x0)
+
+    def _run(self, case, channel, fabric):
+        net, x0, artifacts, _ = case
+        compute = ComputeModel()
+        workers = [WorkerState(rank=m, memory_mb=2000) for m in range(self.P)]
+        panels = [x0[artifacts[m].x0_rows].astype(np.float32)
+                  for m in range(self.P)]
+        for k in range(net.n_layers):
+            bufs = []
+            for m in range(self.P):
+                art = artifacts[m].layers[k]
+                if channel == "queue":
+                    bufs.append(fsi_queue_send_and_local(
+                        art, panels[m], workers[m], fabric, compute))
+                else:
+                    bufs.append(fsi_object_send_and_local(
+                        art, panels[m], workers[m], fabric, compute,
+                        max_object_part=1600))
+            for m in range(self.P):
+                art = artifacts[m].layers[k]
+                if channel == "queue":
+                    bufs[m] = fsi_queue_recv(art, bufs[m], workers[m], fabric,
+                                             compute)
+                else:
+                    bufs[m] = fsi_object_recv(art, bufs[m], workers[m], fabric,
+                                              compute)
+                panels[m] = finish_layer(art, bufs[m], workers[m], compute,
+                                         net.bias)
+        order = np.argsort(np.concatenate(
+            [artifacts[m].layers[-1].out_rows for m in range(self.P)]))
+        return np.concatenate(panels)[order]
+
+    @pytest.mark.parametrize("fault", sorted(QUEUE_FAULTS))
+    def test_queue_reassembly_idempotent(self, case, fault):
+        fabric = QUEUE_FAULTS[fault](self.P, pricing=SMALL_PRICING)
+        out = self._run(case, "queue", fabric)
+        np.testing.assert_allclose(out, case[3], rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("fault", sorted(OBJECT_FAULTS))
+    def test_object_reassembly_idempotent(self, case, fault):
+        fabric = OBJECT_FAULTS[fault](self.P)
+        out = self._run(case, "object", fabric)
+        np.testing.assert_allclose(out, case[3], rtol=1e-4, atol=1e-4)
+
+    def test_queue_duplicate_of_first_chunk_does_not_retire_source(self, case):
+        """Deterministic repro of the premature-retirement hazard: the first
+        chunk of a two-chunk send is delivered twice BEFORE the second chunk
+        arrives.  Naive per-source counting would hit ``total`` on the
+        duplicate and drop the second chunk's rows; (src, seq) dedupe in
+        ``fsi_queue_recv`` must keep the source pending."""
+        from repro.faas.payload import pack_rows
+
+        net, x0, artifacts, _ = case
+        compute = ComputeModel()
+        # find a (worker, layer, src) pair with a real transfer
+        m, k, src = next(
+            (m, k, src)
+            for m in range(self.P)
+            for k in range(net.n_layers)
+            for src in artifacts[m].layers[k].recv_expect
+        )
+        art = artifacts[m].layers[k]
+        src_art = artifacts[src].layers[k]
+        rows = src_art.send_global[m]
+        rng = np.random.default_rng(0)
+        vals = rng.standard_normal((len(rows), 4)).astype(np.float32) + 1.0
+        # force ≥ 2 chunks, then deliver [c0, c0, c1] in that order
+        cap = max(128, (4 + 16) * (len(rows) // 2 + 1))
+        chunks = pack_rows(k, src, rows, vals, cap)
+        while len(chunks) < 2 and cap > 64:
+            cap //= 2
+            chunks = pack_rows(k, src, rows, vals, cap)
+        assert len(chunks) >= 2, "case too small to split"
+        fabric = QueueFabric(self.P, pricing=SMALL_PRICING)
+        fabric.publish_batch(0, [(m, chunks[0])], at_time=0.0)
+        fabric.publish_batch(0, [(m, chunks[0])], at_time=1.0)
+        for i, c in enumerate(chunks[1:], start=2):
+            fabric.publish_batch(0, [(m, c)], at_time=float(i))
+        # a recv map reduced to this single source
+        art_single = dataclasses.replace(
+            art,
+            recv_expect={src: art.recv_expect[src]},
+            backend_states={},
+        )
+        worker = WorkerState(rank=m, memory_mb=2000)
+        x_buf = np.zeros((len(art.needed_rows), 4), np.float32)
+        x_buf = fsi_queue_recv(art_single, x_buf, worker, fabric, compute)
+        pos = np.searchsorted(art.needed_rows, rows)
+        np.testing.assert_array_equal(x_buf[pos], vals)
