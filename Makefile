@@ -12,14 +12,21 @@
 #   make bench        full benchmark sweep
 #   make schema-check validate BENCH_fsi.json rows (name/us_per_call) so the
 #                     perf-trajectory tooling never breaks on a malformed row
+#   make docs-check   verify README/ARCHITECTURE/kernels-README relative
+#                     links resolve (tools/check_doc_links.py)
 #   make lint         byte-compile + import-sanity over src/ (no external
 #                     linter dependency baked into the image)
+#
+# To exercise the mesh-sharded fleet path (pallas-bsr-sharded) on real
+# multi-device host meshes, widen the host platform before jax init —
+# this is CI's second matrix entry:
+#   XLA_FLAGS=--xla_force_host_platform_device_count=4 make test
 
 PY ?= python
 PYTEST_ARGS ?=
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench-quick bench schema-check lint
+.PHONY: test bench-quick bench schema-check docs-check lint
 
 test:
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
@@ -35,6 +42,9 @@ bench:
 schema-check:
 	$(PY) -m benchmarks.check_schema BENCH_fsi.json
 
+docs-check:
+	$(PY) tools/check_doc_links.py
+
 lint:
-	$(PY) -m compileall -q src benchmarks tests
+	$(PY) -m compileall -q src benchmarks tests tools
 	$(PY) -c "import repro.core.backends, repro.core.fsi, repro.faas.simulator, repro.faas.payload; print('import sanity: ok')"

@@ -13,6 +13,15 @@ Also benchmarks the worker compute backends (PR 1):
   ``matmul_dense_fast`` — and report the speedup.
 * ``fsi_backend_*`` rows run the full queue pipeline per backend and report
   host wall-clock (billed µs/query is backend-invariant by design).
+
+And the mesh-sharded paper-scale fleet path (PR 3):
+
+* ``fsi_sharded_*`` rows sweep P≥64 fleets through the
+  ``pallas-bsr-sharded`` backend — the fleet panel laid over a ``worker``
+  device mesh via shard_map — at paper-scale neuron counts (quick: N=1024;
+  full adds N=16384; the N=65536 GraphChallenge size works through the same
+  path, pass ``cases=((64, 65536, 1, 4),)`` explicitly — its offline BSR
+  prep densifies 1024×65536 shards and is minutes of wall time).
 """
 
 from __future__ import annotations
@@ -79,8 +88,50 @@ def bench_backends(net, x0, oracle, P: int = 8,
     return rows
 
 
+def bench_sharded_fleet(
+    cases: Sequence[tuple] = ((64, 1024, 4, 16),),
+) -> List[dict]:
+    """Paper-scale fleet sweep (P≥64, §VI neuron counts) through the
+    mesh-sharded backend.  ``cases`` are (P, neurons, layers, batch) tuples;
+    each runs the full queue pipeline with the fleet panel sharded over a
+    ``worker`` mesh built from every visible device (1 on a plain CPU host;
+    set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+    init for a wider host mesh)."""
+    rows: List[dict] = []
+    try:
+        get_backend("pallas-bsr-sharded")
+    except ImportError:
+        return [dict(name=f"fsi_sharded_P{p}_N{n}", us_per_call="",
+                     note="jax not installed") for p, n, _, _ in cases]
+    import jax
+
+    from repro.launch.mesh import make_worker_mesh
+
+    mesh = make_worker_mesh()
+    for P, N, L, batch in cases:
+        net = make_sparse_dnn(N, n_layers=L, seed=0)
+        x0 = make_inputs(N, batch, seed=1)
+        oracle = dense_inference(net, x0)
+        t0 = time.perf_counter()
+        r = run_fsi(net, x0, P=P, channel="queue", memory_mb=4000,
+                    compute_backend="pallas-bsr-sharded", mesh=mesh)
+        wall = time.perf_counter() - t0
+        assert np.allclose(r.output, oracle, rtol=1e-4, atol=1e-4)
+        rows.append(dict(
+            name=f"fsi_sharded_P{P}_N{N}", P=P, neurons=N, layers=L,
+            devices=len(jax.devices()),
+            per_sample_ms=r.per_sample_ms(batch),
+            cost_usd=r.cost.total,
+            comms_usd=r.cost.communication,
+            wire_mb=r.wire_exchange_bytes / 1e6,
+            wall_s=round(wall, 4),
+        ))
+    return rows
+
+
 def run(neurons=512, layers=24, batch=64, workers=(2, 4, 8, 16),
-        backends=("numpy-csr", "numpy-fast", "pallas-bsr")) -> List[dict]:
+        backends=("numpy-csr", "numpy-fast", "pallas-bsr"),
+        sharded_cases=((64, 1024, 4, 16), (64, 16384, 2, 8))) -> List[dict]:
     net = make_sparse_dnn(neurons, n_layers=layers, seed=0)
     x0 = make_inputs(neurons, batch, seed=1)
     oracle = dense_inference(net, x0)
@@ -108,4 +159,5 @@ def run(neurons=512, layers=24, batch=64, workers=(2, 4, 8, 16),
             ))
     rows.extend(bench_backends(net, x0, oracle, P=max(workers),
                                backends=backends))
+    rows.extend(bench_sharded_fleet(sharded_cases))
     return rows

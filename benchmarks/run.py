@@ -55,7 +55,9 @@ def main(argv=None) -> None:
     t0 = time.time()
     if args.quick:
         _emit(bench_fsi_channels.run(neurons=256, layers=12, batch=32,
-                                     workers=(2, 4, 8)), sink)
+                                     workers=(2, 4, 8),
+                                     sharded_cases=((64, 1024, 4, 16),)),
+              sink)
         _emit(bench_partitioning.run(neurons=512, layers=12, batch=16, P=8), sink)
         _emit(bench_cost_model.run(neurons=256, layers=12, batch=32, P=4), sink)
         _emit(bench_sporadic.run(neurons=256, layers=12, batch=32), sink)

@@ -19,6 +19,14 @@ the numbers.  This module makes that choice pluggable:
   worker-layer, jit-cached fused bias+ReLU+clip dispatch, and a fleet mode
   that stacks every worker's panel so ONE vmapped device dispatch serves the
   whole simulated fleet per layer.
+* ``pallas-bsr-sharded`` — the same fleet panel laid out over a real device
+  mesh: the stacked worker axis is sharded over a 1-D ``worker`` mesh axis
+  (``launch.mesh.make_worker_mesh``) and each layer dispatches through
+  ``distributed.sharding.shard_map_compat`` with per-shard Pallas BSR
+  bodies, so simulated workers map 1:1 (or blocked P/D) onto devices — the
+  paper's "one worker ≈ one isolated compute unit" execution model instead
+  of one fused vmap.  P not divisible by the device count is padded with
+  zero workers.
 
 Backends only change how the arithmetic is executed — FLOP charging, message
 accounting and memory high-water marks are computed by the caller from the
@@ -62,6 +70,7 @@ __all__ = [
     "NumpyCsrBackend",
     "NumpyFastBackend",
     "PallasBsrBackend",
+    "PallasBsrShardedBackend",
     "AttentionBackend",
     "DenseRefAttention",
     "ChunkedLseAttention",
@@ -228,6 +237,32 @@ class PallasBsrBackend:
 
     # -- fleet path ----------------------------------------------------------
 
+    def _fleet_maxima(self, layer_states):
+        """(nbr_max, k_max, n_pad_max) over every worker-layer state, or
+        ``None`` when the fleet is empty — padding everything to these maxima
+        lets one jit-compiled shape serve every layer."""
+        all_states = [s for layer in layer_states for s in layer]
+        if not all_states:
+            return None
+        bn = self.block_shape[1]
+        return (
+            max(1, max(s.blocks.shape[0] for s in all_states)),
+            max(1, max(s.blocks.shape[1] for s in all_states)),
+            max(bn, max(s.n_pad for s in all_states)),
+        )
+
+    def _stack_layer(self, states, p_rows: int, nbr_max: int, k_max: int):
+        """Stack one layer's per-worker operands into [p_rows, ...] host
+        panels (rows beyond ``len(states)`` stay zero — inert pad workers)."""
+        bm, bn = self.block_shape
+        blocks = np.zeros((p_rows, nbr_max, k_max, bm, bn), dtype=np.float32)
+        cols = np.zeros((p_rows, nbr_max, k_max), dtype=np.int32)
+        for i, s in enumerate(states):
+            nbr, k = s.blocks.shape[:2]
+            blocks[i, :nbr, :k] = s.blocks
+            cols[i, :nbr, :k] = s.cols
+        return blocks, cols
+
     def fleet_prepare_all(
         self, layer_states: Sequence[Sequence[_PallasLayerState]]
     ) -> List[_PallasFleetState]:
@@ -235,22 +270,13 @@ class PallasBsrBackend:
         so each layer's dispatch shares one jit-compiled shape."""
         import jax.numpy as jnp
 
-        all_states = [s for layer in layer_states for s in layer]
-        if not all_states:
+        maxima = self._fleet_maxima(layer_states)
+        if maxima is None:
             return []
-        bm, bn = self.block_shape
-        nbr_max = max(1, max(s.blocks.shape[0] for s in all_states))
-        k_max = max(1, max(s.blocks.shape[1] for s in all_states))
-        n_pad_max = max(bn, max(s.n_pad for s in all_states))
+        nbr_max, k_max, n_pad_max = maxima
         out: List[_PallasFleetState] = []
         for states in layer_states:
-            P = len(states)
-            blocks = np.zeros((P, nbr_max, k_max, bm, bn), dtype=np.float32)
-            cols = np.zeros((P, nbr_max, k_max), dtype=np.int32)
-            for i, s in enumerate(states):
-                nbr, k = s.blocks.shape[:2]
-                blocks[i, :nbr, :k] = s.blocks
-                cols[i, :nbr, :k] = s.cols
+            blocks, cols = self._stack_layer(states, len(states), nbr_max, k_max)
             out.append(
                 _PallasFleetState(
                     blocks=jnp.asarray(blocks),
@@ -279,6 +305,141 @@ class PallasBsrBackend:
                 fleet_state.blocks,
                 fleet_state.cols,
                 jnp.asarray(X),
+                bias=float(bias),
+                clip=self.clip,
+                batch_block=self._bb(batch),
+                interpret=self.interpret,
+            )
+        )
+        return [y[i, : fleet_state.m[i]] for i in range(P)]
+
+
+@dataclasses.dataclass
+class _PallasShardedFleetState(_PallasFleetState):
+    """Fleet panel whose worker axis is padded to a device-count multiple and
+    laid out over the ``worker`` mesh axis (blocks/cols live device-resident
+    under a NamedSharding from prepare time on)."""
+
+    p_pad: int = 0          # padded worker count (multiple of mesh axis size)
+
+
+class PallasBsrShardedBackend(PallasBsrBackend):
+    """``pallas-bsr`` fleet mode over a real device mesh via ``shard_map``.
+
+    The per-worker-layer artifacts are identical to :class:`PallasBsrBackend`
+    (inherited ``prepare``/``apply``); only the fleet dispatch differs: the
+    stacked [P, ...] panel is sharded over a 1-D ``worker`` mesh axis and
+    every device runs the Pallas BSR body for its block of P/D workers —
+    simulated Lambdas map onto devices the way the paper (and FMI-style
+    serverless collectives) assume one worker maps onto one isolated compute
+    unit.  When P is not divisible by the device count the panel is padded
+    with all-zero workers whose outputs are never read.
+
+    ``mesh`` defaults to every visible device
+    (:func:`repro.launch.mesh.make_worker_mesh`); pass an explicit mesh — or
+    use ``run_fsi(..., mesh=...)`` — to pin the layout.  On CPU-only hosts
+    multi-device meshes come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+
+    name = "pallas-bsr-sharded"
+
+    def __init__(
+        self,
+        block_shape: Tuple[int, int] = (32, 32),
+        batch_block: int = 128,
+        interpret: bool = True,
+        clip: float = ACTIVATION_CLIP,
+        mesh: Any = None,
+        axis_name: str = "worker",
+    ):
+        super().__init__(block_shape=block_shape, batch_block=batch_block,
+                         interpret=interpret, clip=clip)
+        self._mesh = mesh
+        self.axis_name = axis_name
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.launch.mesh import make_worker_mesh
+
+            self._mesh = make_worker_mesh(axis_name=self.axis_name)
+        return self._mesh
+
+    def with_mesh(self, mesh) -> "PallasBsrShardedBackend":
+        """A copy of this backend pinned to ``mesh`` (the hook ``run_fsi``
+        uses to thread an explicit mesh through backend selection)."""
+        return PallasBsrShardedBackend(
+            block_shape=self.block_shape, batch_block=self.batch_block,
+            interpret=self.interpret, clip=self.clip, mesh=mesh,
+            axis_name=self.axis_name,
+        )
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.shape[self.axis_name])
+
+    @property
+    def state_key(self) -> str:
+        return f"{super().state_key}:d{self.n_devices}:{self.axis_name}"
+
+    def _sharding(self):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        return NamedSharding(self.mesh, PartitionSpec(self.axis_name))
+
+    def fleet_prepare_all(
+        self, layer_states: Sequence[Sequence[_PallasLayerState]]
+    ) -> List[_PallasShardedFleetState]:
+        """Stack + pad the worker axis to a device-count multiple and place
+        the panels over the mesh at prepare time (offline, unbilled) so no
+        layer dispatch pays a host→device reshard for the weights."""
+        import jax
+
+        maxima = self._fleet_maxima(layer_states)
+        if maxima is None:
+            return []
+        nbr_max, k_max, n_pad_max = maxima
+        D = self.n_devices
+        sharding = self._sharding()
+        out: List[_PallasShardedFleetState] = []
+        for states in layer_states:
+            P = len(states)
+            p_pad = -(-P // D) * D
+            blocks, cols = self._stack_layer(states, p_pad, nbr_max, k_max)
+            out.append(
+                _PallasShardedFleetState(
+                    blocks=jax.device_put(blocks, sharding),
+                    cols=jax.device_put(cols, sharding),
+                    m=[s.m for s in states],
+                    n=[s.n for s in states],
+                    n_pad=n_pad_max,
+                    p_pad=p_pad,
+                )
+            )
+        return out
+
+    def fleet_apply(
+        self, fleet_state: _PallasShardedFleetState, xs: Sequence[np.ndarray],
+        bias: float,
+    ) -> List[np.ndarray]:
+        import jax
+
+        from repro.kernels.bsr_spmm.ops import bsr_spmm_fleet_sharded
+
+        P = len(xs)
+        batch = xs[0].shape[1]
+        X = np.zeros((fleet_state.p_pad, fleet_state.n_pad, batch),
+                     dtype=np.float32)
+        for i, x in enumerate(xs):
+            X[i, : x.shape[0]] = x
+        y = np.asarray(
+            bsr_spmm_fleet_sharded(
+                fleet_state.blocks,
+                fleet_state.cols,
+                jax.device_put(X, self._sharding()),
+                mesh=self.mesh,
+                axis_name=self.axis_name,
                 bias=float(bias),
                 clip=self.clip,
                 batch_block=self._bb(batch),
@@ -430,6 +591,7 @@ _REGISTRY: Dict[str, type] = {
     NumpyCsrBackend.name: NumpyCsrBackend,
     NumpyFastBackend.name: NumpyFastBackend,
     PallasBsrBackend.name: PallasBsrBackend,
+    PallasBsrShardedBackend.name: PallasBsrShardedBackend,
 }
 BACKEND_NAMES = tuple(_REGISTRY)
 

@@ -116,14 +116,20 @@ class CSRMatrix:
         np.add.at(out, rows, contrib)
         return out
 
-    def matmul_dense_fast(self, x: np.ndarray) -> np.ndarray:
+    def matmul_dense_fast(self, x: np.ndarray,
+                          tile_elems: int = 1 << 22) -> np.ndarray:
         """Vectorized ``self @ x`` with x dense [ncols, B].
 
         Uniform-nnz rows (the GraphChallenge case: every row has exactly
         ``nnz_per_row`` entries, and row subsets keep whole rows) reshape the
         gathered contributions to [nrows, k, B] and contract the k axis with a
-        batched matmul — no [nnz, B] temporary, no scatter.  Ragged rows fall
-        back to a segment ``np.add.reduceat`` over the CSR row pointers.
+        batched matmul — no [nnz, B] temporary, no scatter.  Ragged rows use
+        a segment ``np.add.reduceat`` over the CSR row pointers, **tiled over
+        the batch axis**: the contribution temporary is materialized one
+        [nnz, bt] panel at a time with ``bt = tile_elems // nnz`` columns, so
+        peak extra memory is bounded by ~``tile_elems`` elements (default
+        4Mi ≈ 16–32MB) instead of growing as nnz·B — big-batch ragged shards
+        no longer spike the worker's high-water mark.
         """
         B = x.shape[1]
         counts = np.diff(self.indptr)
@@ -134,12 +140,18 @@ class CSRMatrix:
             k = int(counts[0])
             xg = x[self.indices].reshape(self.nrows, k, B)
             return np.matmul(self.data.reshape(self.nrows, 1, k), xg)[:, 0, :]
-        contrib = self.data[:, None] * x[self.indices]
-        out = np.zeros((self.nrows, B), dtype=contrib.dtype)
+        out = np.zeros((self.nrows, B), dtype=dtype)
         nonempty = counts > 0
         starts = self.indptr[:-1][nonempty]
-        if starts.size:
-            out[nonempty] = np.add.reduceat(contrib, starts, axis=0)
+        if not starts.size:
+            return out
+        data_col = self.data[:, None]
+        bt = max(1, min(B, tile_elems // max(1, self.nnz)))
+        for b0 in range(0, B, bt):
+            # advanced row index + basic column slice: gathers only the
+            # [nnz, bt] panel, never the full [nnz, B] temporary
+            contrib = data_col * x[self.indices, b0:b0 + bt]
+            out[nonempty, b0:b0 + bt] = np.add.reduceat(contrib, starts, axis=0)
         return out
 
 

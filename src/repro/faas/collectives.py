@@ -88,28 +88,37 @@ def reduce_to_root(
 ) -> np.ndarray:
     """Reduce(P_0, ·): partial aggregation at internal nodes (paper line 20/25).
 
-    ``op='concat_rows'`` stacks row panels (the FSI output gather);
+    ``op='concat_rows'`` stacks row panels **in worker-rank order** (the FSI
+    output gather — callers unpermute against rank-ordered row ids, so the
+    root re-sorts the panels it aggregated in tree-traversal order; with
+    branching b, ranks ≥ b+2 otherwise arrive interleaved under their parent
+    subtree and the gather would be silently misassembled);
     ``op='sum'`` adds equal-shaped arrays (classic MPI_Reduce).
     """
     P = len(workers)
     edge = _edge_cost(fabric)
-    acc: List[List[np.ndarray]] = [[payloads[m]] for m in range(P)]
+    # accumulate (rank, panel) pairs so the root can restore rank order no
+    # matter how the tree interleaved the subtrees
+    acc: List[List[tuple]] = [[(m, payloads[m])] for m in range(P)]
     done = [0.0] * P
     for m in reversed(range(P)):
         t = workers[m].abs_time
         for c in tree.children(m):
-            blob = b"".join(np.ascontiguousarray(a).tobytes() for a in acc[c])
+            blob = b"".join(np.ascontiguousarray(a).tobytes()
+                            for _, a in acc[c])
             t = max(t, done[c] + edge + len(blob) / _bandwidth(fabric))
             _bill_edge(fabric, layer_tag, c, m, blob)
             acc[m].extend(acc[c])
         done[m] = t
     workers[0].advance_to_abs(done[0])
     if op == "sum":
-        out = acc[0][0].copy()
-        for a in acc[0][1:]:
+        out = acc[0][0][1].copy()
+        for _, a in acc[0][1:]:
             out = out + a
         return out
-    return np.concatenate(acc[0], axis=0)
+    return np.concatenate(
+        [a for _, a in sorted(acc[0], key=lambda pair: pair[0])], axis=0
+    )
 
 
 def broadcast(

@@ -119,10 +119,22 @@ def run_fsi(
     straggler_timeout: float = 3.0,
     partition: Optional[PartitionResult] = None,
     compute_backend: Union[str, ComputeBackend, None] = None,
+    mesh: Optional[object] = None,
 ) -> FsiRunResult:
     latency = latency or LatencyModel()
     compute = compute or ComputeModel()
     backend = get_backend(compute_backend)
+    # Mesh threading for device-sharded fleet backends (pallas-bsr-sharded):
+    # the mesh rides on the backend instance, so everything downstream —
+    # prepare_worker_artifacts, fleet_prepare_all, fleet_apply — sees one
+    # consistent worker-axis layout without new plumbing.
+    if mesh is not None:
+        if not hasattr(backend, "with_mesh"):
+            raise ValueError(
+                f"compute backend {backend.name!r} does not take a mesh; "
+                f"use 'pallas-bsr-sharded'"
+            )
+        backend = backend.with_mesh(mesh)
     batch = x0.shape[1]
 
     # ---------------- Serial short-circuit ---------------------------------
@@ -146,8 +158,10 @@ def run_fsi(
     plans = build_comm_plans(net.layers, partition)
     artifacts = prepare_worker_artifacts(net.layers, partition, plans,
                                          backend=backend)
-    # Fleet batching (pallas-bsr): stack each layer's per-worker operands so
-    # one device dispatch serves all P workers; numpy backends return None.
+    # Fleet batching: pallas-bsr stacks each layer's per-worker operands so
+    # one device dispatch serves all P workers; pallas-bsr-sharded lays that
+    # stack over a `worker` mesh axis (shard_map, blocked P/D per device);
+    # numpy backends return None and finish per worker.
     fleet_states = backend.fleet_prepare_all(
         [[artifacts[m].layers[k].state_for(backend) for m in range(P)]
          for k in range(net.n_layers)]

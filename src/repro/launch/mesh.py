@@ -13,7 +13,8 @@ from typing import Optional, Tuple
 import jax
 import numpy as np
 
-__all__ = ["make_production_mesh", "make_mesh", "MeshAxes", "mesh_axes_of"]
+__all__ = ["make_production_mesh", "make_mesh", "make_worker_mesh",
+           "MeshAxes", "mesh_axes_of"]
 
 
 def _mesh_compat(shape: Tuple[int, ...], axes: Tuple[str, ...]):
@@ -33,6 +34,17 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh (tests use small CPU meshes)."""
     return _mesh_compat(shape, axes)
+
+
+def make_worker_mesh(n_devices: Optional[int] = None,
+                     axis_name: str = "worker"):
+    """1-D ``(worker,)`` mesh for the mesh-sharded FSI fleet backend
+    (``pallas-bsr-sharded``): one mesh axis carrying the simulated-Lambda
+    dimension, sized to the host's devices by default.  Tests get >1 CPU
+    devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set
+    before the first jax init."""
+    n = n_devices or len(jax.devices())
+    return _mesh_compat((n,), (axis_name,))
 
 
 class MeshAxes:

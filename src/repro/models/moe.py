@@ -36,6 +36,15 @@ from repro.models import transformer as TF
 PyTree = Any
 ACC = jnp.float32
 
+# MoE decode holds the latent/KV cache at fp32 (the PR 2 bisect: kimi-k2's
+# decode-vs-teacher-forcing drift came entirely from bf16 rounding of cached
+# K/V — the probability row is rounded against the cache dtype, and the MoE
+# router amplifies the rounding into ~2.5e-2 logit error on worst-case rows;
+# with an fp32 cache all attention backends produce bitwise-identical logits).
+# Costs 2× decode-cache memory for the MoE family only; the numerics story is
+# documented in docs/ARCHITECTURE.md §Numerics.
+DECODE_CACHE_DTYPE = jnp.float32
+
 
 # ---------------------------------------------------------------------------
 # init
@@ -400,7 +409,8 @@ def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
                 h = h + out
             k_pad = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
             v_pad = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            return h, (k_pad, v_pad)
+            return h, (k_pad.astype(DECODE_CACHE_DTYPE),
+                       v_pad.astype(DECODE_CACHE_DTYPE))
 
         if cfg.remat:
             body = jax.checkpoint(body, prevent_cse=False)

@@ -130,6 +130,23 @@ class TestVectorizedContainers:
         empty = csr.select_rows(np.zeros(0, np.int64))
         assert empty.shape == (0, 48) and empty.nnz == 0
 
+    def test_ragged_blocked_reduceat_matches_scatter(self):
+        """The batch-tiled ragged path (bounded [nnz, bt] contrib panels)
+        must equal the scatter oracle for every tile width, including tiles
+        that do not divide the batch."""
+        rng = np.random.default_rng(5)
+        ragged = random_sparse(96, 96, 9, rng)
+        d = ragged.to_dense()
+        d[::5] = 0.0  # empty rows → ragged counts, reduceat path
+        csr = csr_from_dense(d)
+        x = rng.standard_normal((96, 40)).astype(np.float32)
+        oracle = csr.matmul_dense_scatter(x)
+        # tile_elems below nnz → bt=1; mid sizes → several tiles; huge → one
+        for tile_elems in (1, csr.nnz * 3, csr.nnz * 7, 1 << 22):
+            got = csr.matmul_dense_fast(x, tile_elems=tile_elems)
+            np.testing.assert_allclose(got, oracle, rtol=1e-6, atol=1e-6,
+                                       err_msg=f"tile_elems={tile_elems}")
+
     def test_padded_matches_naive(self):
         rng = np.random.default_rng(1)
         csr = random_sparse(128, 128, 8, rng)

@@ -1,0 +1,41 @@
+"""Top-level docs stay navigable: the files exist, the relative links
+resolve (the CI docs-check in-process), and the backend registries named in
+the README actually exist in code."""
+
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+from check_doc_links import DEFAULT_DOCS, check_file  # noqa: E402
+
+
+@pytest.mark.parametrize("doc", DEFAULT_DOCS)
+def test_doc_exists(doc):
+    assert os.path.exists(os.path.join(REPO, doc)), f"{doc} missing"
+
+
+@pytest.mark.parametrize("doc", DEFAULT_DOCS)
+def test_relative_links_resolve(doc):
+    problems = check_file(os.path.join(REPO, doc))
+    assert not problems, "\n".join(problems)
+
+
+def test_link_checker_flags_broken_links(tmp_path):
+    md = tmp_path / "doc.md"
+    md.write_text("ok [a](#anchor) [b](https://x.test) bad [c](missing.md)\n")
+    problems = check_file(str(md))
+    assert len(problems) == 1 and "missing.md" in problems[0]
+
+
+def test_readme_backend_names_are_real():
+    """The README's backend matrices must not drift from the registries."""
+    from repro.core.backends import ATTENTION_BACKEND_NAMES, BACKEND_NAMES
+
+    with open(os.path.join(REPO, "README.md"), encoding="utf-8") as f:
+        readme = f.read()
+    for name in (*BACKEND_NAMES, *ATTENTION_BACKEND_NAMES):
+        assert f"`{name}`" in readme, f"README missing backend {name!r}"

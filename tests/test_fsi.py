@@ -113,6 +113,39 @@ class TestFsiAccounting:
         assert mitigated.makespan <= plain.makespan
 
 
+class TestReduceGatherOrder:
+    """Regression: ``reduce_to_root(op='concat_rows')`` must stack panels in
+    worker-RANK order, not launch-tree traversal order.  With branching 4 the
+    root aggregates [p0] + subtree(1) + ... — so p5 arrived between p1 and p2
+    and every rank ≥ 6 run misassembled its output gather (masked at tiny N
+    where the permuted activation rows happened to coincide; exposed by the
+    paper-scale P≥64 sweeps)."""
+
+    def test_concat_rows_is_rank_ordered(self):
+        from repro.core.cost_model import AWS_PRICING
+        from repro.faas.collectives import reduce_to_root
+        from repro.faas.launch_tree import TreeSpec
+        from repro.faas.queue_service import QueueFabric
+        from repro.faas.worker import WorkerState
+
+        P = 6  # rank 5 is a child of rank 1 → tree order [0, 1, 5, 2, 3, 4]
+        workers = [WorkerState(rank=m, memory_mb=1000) for m in range(P)]
+        fabric = QueueFabric(P, pricing=AWS_PRICING, seed=0)
+        panels = [np.full((2, 3), m, dtype=np.float32) for m in range(P)]
+        out = reduce_to_root(workers, fabric, TreeSpec(n_workers=P, branching=4),
+                             panels, op="concat_rows")
+        np.testing.assert_array_equal(out, np.concatenate(panels, axis=0))
+
+    def test_paper_scale_p_matches_oracle(self):
+        """P=64 (the paper's smallest high-parallelism fleet) end-to-end —
+        deep trees with interleaved subtrees everywhere."""
+        net = make_sparse_dnn(512, n_layers=4, seed=0)
+        x0 = make_inputs(512, 8, seed=1)
+        oracle = dense_inference(net, x0)
+        r = run_fsi(net, x0, P=64, channel="queue", memory_mb=4000)
+        np.testing.assert_allclose(r.output, oracle, rtol=1e-5, atol=1e-5)
+
+
 @settings(max_examples=8, deadline=None)
 @given(
     seed=st.integers(min_value=0, max_value=10**6),

@@ -77,13 +77,10 @@ def test_decode_matches_teacher_forcing(arch):
     """Decode-with-cache must agree with full forward on the same prefix."""
     import dataclasses
 
-    if arch == "kimi-k2-1t-a32b":
-        # pre-existing (seed) numeric drift: 2/1024 logits land ~0.005 past
-        # the 2e-2 tolerance on the reduced MLA+MoE config.  Bisected to the
-        # bf16 latent/KV-cache dtype: the same decode matches teacher forcing
-        # once the cache is held at fp32 — see
-        # test_kimi_decode_matches_teacher_forcing_fp32_latent_cache below.
-        pytest.xfail("kimi reduced-config decode drift (bf16 latent cache)")
+    # kimi-k2 no longer xfails here: the PR 2 bisect (bf16 latent/KV-cache
+    # rounding) became the product fix — MoE decode holds its cache at fp32
+    # (moe.DECODE_CACHE_DTYPE), so the reduced config decodes within the
+    # standard 2e-2 tolerance like every other family.
 
     cfg = get_config(arch).reduced()
     if cfg.family == "encdec":
@@ -121,14 +118,14 @@ def test_decode_matches_teacher_forcing(arch):
 
 
 def test_kimi_decode_matches_teacher_forcing_fp32_latent_cache():
-    """Bisectable repro for the kimi-k2 decode drift (ROADMAP "audit the
-    drift" item): with the MLA latent/KV cache held at fp32, decode-with-cache
-    agrees with the teacher-forced forward pass within the standard 2e-2
-    tolerance (measured max |Δ| ≈ 1.9e-2, zero violations).  The remaining
-    xfail in ``test_decode_matches_teacher_forcing`` therefore isolates the
-    drift to bf16 rounding of cached K/V (the dense decode path rounds the
-    probability row against the cache dtype), not to the MoE capacity path —
-    this test is the regression gate for that finding."""
+    """Regression gate for the kimi-k2 decode-drift fix: the PR 2 bisect
+    showed the drift was entirely bf16 rounding of cached K/V (the dense
+    decode path rounds the probability row against the cache dtype), and MoE
+    decode now holds its latent/KV cache at fp32 (``moe.DECODE_CACHE_DTYPE``)
+    as the product fix.  This test pins the bisect itself: even with every
+    bf16 leaf force-cast to fp32 (a no-op now that prefill emits fp32 caches),
+    decode-with-cache agrees with the teacher-forced forward pass within the
+    standard 2e-2 tolerance (measured max |Δ| ≈ 1.9e-2)."""
     import dataclasses
 
     cfg = get_config("kimi-k2-1t-a32b").reduced()

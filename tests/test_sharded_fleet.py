@@ -1,0 +1,150 @@
+"""Mesh-sharded fleet parity: ``pallas-bsr-sharded`` ≡ ``numpy-csr`` oracle
+≡ single-device ``pallas-bsr``, over ``worker`` host-device meshes.
+
+Two layers of coverage:
+
+* **in-process** — meshes built from whatever devices this pytest process
+  sees (1 on a plain host; 4 under the CI matrix entry that sets
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` before jax init),
+  including a P-not-divisible-by-device-count fleet;
+* **subprocess** — a forced 4-device host platform sweeping meshes of
+  1, 2 and 4 devices with P=6 (not divisible by 4 → zero-worker padding),
+  so the multi-device shard_map path is exercised even when the parent
+  process initialized jax with a single device.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core.backends import (  # noqa: E402
+    PallasBsrBackend,
+    PallasBsrShardedBackend,
+    get_backend,
+)
+from repro.core.sparse import random_sparse  # noqa: E402
+from repro.data.graphchallenge import (  # noqa: E402
+    dense_inference,
+    make_inputs,
+    make_sparse_dnn,
+)
+from repro.faas.simulator import run_fsi  # noqa: E402
+from repro.launch.mesh import make_worker_mesh  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def case():
+    net = make_sparse_dnn(256, n_layers=6, seed=0)
+    x0 = make_inputs(256, 16, seed=1)
+    return net, x0, dense_inference(net, x0)
+
+
+class TestShardedFleetBackend:
+    def test_registry_resolves_and_rejects_meshless(self):
+        be = get_backend("pallas-bsr-sharded")
+        assert isinstance(be, PallasBsrShardedBackend)
+        assert be.n_devices == len(jax.devices())
+        # numpy backends cannot take a mesh through run_fsi
+        net = make_sparse_dnn(128, n_layers=2, seed=0)
+        x0 = make_inputs(128, 4, seed=1)
+        with pytest.raises(ValueError, match="does not take a mesh"):
+            run_fsi(net, x0, P=2, channel="queue", memory_mb=2000,
+                    compute_backend="numpy-fast", mesh=make_worker_mesh(1))
+
+    def test_state_key_includes_mesh_layout(self):
+        a = PallasBsrShardedBackend(mesh=make_worker_mesh(1))
+        assert a.state_key != PallasBsrBackend().state_key
+        assert ":d1:worker" in a.state_key
+
+    def test_fleet_apply_matches_per_worker_and_vmapped_fleet(self):
+        """Sharded dispatch ≡ per-worker apply ≡ the plain vmapped fleet,
+        with a worker count that does not divide multi-device meshes (P=3)."""
+        rng = np.random.default_rng(11)
+        plain = PallasBsrBackend()
+        sharded = PallasBsrShardedBackend(mesh=make_worker_mesh())
+        shards = [random_sparse(64 + 32 * i, 96, 6, rng) for i in range(3)]
+        states = [sharded.prepare(W) for W in shards]
+        xs = [rng.standard_normal((W.ncols, 16)).astype(np.float32)
+              for W in shards]
+        fleet = sharded.fleet_prepare_all([states])
+        D = sharded.n_devices
+        assert fleet[0].p_pad % D == 0 and fleet[0].p_pad >= 3
+        got = sharded.fleet_apply(fleet[0], xs, -0.3)
+        ref_fleet = plain.fleet_apply(plain.fleet_prepare_all([states])[0],
+                                      xs, -0.3)
+        for W, st, x, y, yf in zip(shards, states, xs, got, ref_fleet):
+            assert y.shape == (W.nrows, 16)
+            np.testing.assert_allclose(y, sharded.apply(st, x, -0.3),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(y, yf, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("channel", ["queue", "object"])
+    def test_run_fsi_matches_oracle_and_plain_backend(self, case, channel):
+        """End-to-end on both channels: output ≡ oracle ≡ pallas-bsr, and
+        billed accounting is backend-invariant (charges derive from the CSR
+        shard, never from the device layout)."""
+        net, x0, oracle = case
+        ref = run_fsi(net, x0, P=6, channel=channel, memory_mb=4000,
+                      compute_backend="numpy-csr")
+        r = run_fsi(net, x0, P=6, channel=channel, memory_mb=4000,
+                    compute_backend="pallas-bsr-sharded")
+        np.testing.assert_allclose(r.output, oracle, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(r.output, ref.output, rtol=1e-4, atol=1e-4)
+        assert r.metrics["flops_total"] == ref.metrics["flops_total"]
+        assert r.raw_exchange_bytes == ref.raw_exchange_bytes
+        assert r.cost.total == pytest.approx(ref.cost.total, rel=0.05)
+
+    def test_explicit_mesh_threads_through_run_fsi(self, case):
+        net, x0, oracle = case
+        mesh = make_worker_mesh(1)
+        r = run_fsi(net, x0, P=5, channel="queue", memory_mb=4000,
+                    compute_backend="pallas-bsr-sharded", mesh=mesh)
+        np.testing.assert_allclose(r.output, oracle, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.slow
+def test_multi_device_mesh_parity():
+    """Forced 4-device host platform: meshes of 1, 2, 4 devices, P=6 workers
+    (not divisible by 4 → the zero-worker padding path), parity vs the
+    numpy-csr oracle run and billing invariance at every width."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np, jax
+        from repro.data.graphchallenge import (
+            dense_inference, make_inputs, make_sparse_dnn)
+        from repro.faas.simulator import run_fsi
+        from repro.launch.mesh import make_worker_mesh
+
+        assert len(jax.devices()) == 4, jax.devices()
+        net = make_sparse_dnn(256, n_layers=4, seed=0)
+        x0 = make_inputs(256, 16, seed=1)
+        oracle = dense_inference(net, x0)
+        ref = run_fsi(net, x0, P=6, channel="queue", memory_mb=4000,
+                      compute_backend="numpy-csr")
+        for d in (1, 2, 4):
+            r = run_fsi(net, x0, P=6, channel="queue", memory_mb=4000,
+                        compute_backend="pallas-bsr-sharded",
+                        mesh=make_worker_mesh(d))
+            assert np.allclose(r.output, oracle, rtol=1e-4, atol=1e-4), d
+            assert np.allclose(r.output, ref.output, rtol=1e-4, atol=1e-4), d
+            assert r.metrics["flops_total"] == ref.metrics["flops_total"], d
+            assert r.raw_exchange_bytes == ref.raw_exchange_bytes, d
+        print("SHARDED_MESH_OK")
+    """)
+    pythonpath = os.pathsep.join(
+        p for p in ("src", os.environ.get("PYTHONPATH", "")) if p
+    )
+    env = dict(os.environ, PYTHONPATH=pythonpath)
+    env.pop("XLA_FLAGS", None)  # the script pins its own device count
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True,
+                         cwd=os.path.dirname(os.path.dirname(__file__)),
+                         timeout=600)
+    assert "SHARDED_MESH_OK" in out.stdout, out.stderr[-3000:]

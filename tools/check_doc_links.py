@@ -1,0 +1,70 @@
+"""Docs link check: every relative markdown link must resolve on disk.
+
+FuncPipe-style reproductions die at onboarding when the README points at a
+moved file, so CI (and ``tests/test_docs.py``) verify that every
+``[text](target)`` in the top-level docs resolves: relative targets (with
+optional ``#fragment``) must exist relative to the containing file; absolute
+URLs (``http://``, ``https://``, ``mailto:``) and pure in-page anchors are
+skipped.
+
+Usage::
+
+    python tools/check_doc_links.py [FILE.md ...]   # default: the doc set
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List
+
+DEFAULT_DOCS = (
+    "README.md",
+    "docs/ARCHITECTURE.md",
+    "src/repro/kernels/README.md",
+)
+
+# [text](target) — non-greedy text, target up to the closing paren; images
+# (![alt](target)) match too, which is what we want.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(path: str) -> List[str]:
+    """Returns human-readable problems for one markdown file."""
+    problems: List[str] = []
+    try:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+    except OSError as e:
+        return [f"{path}: unreadable ({e})"]
+    base = os.path.dirname(os.path.abspath(path))
+    for n, line in enumerate(text.splitlines(), start=1):
+        for target in _LINK_RE.findall(line):
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not os.path.exists(os.path.join(base, rel)):
+                problems.append(f"{path}:{n}: broken link -> {target}")
+    return problems
+
+
+def main(argv=None) -> int:
+    files = (argv or sys.argv[1:]) or [
+        p for p in DEFAULT_DOCS if os.path.exists(p)
+    ]
+    problems: List[str] = []
+    for path in files:
+        problems.extend(check_file(path))
+    for p in problems:
+        print(p, file=sys.stderr)
+    if not problems:
+        print(f"doc links ok ({len(files)} files)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
