@@ -2,11 +2,16 @@
 #
 #   make test         tier-1 suite (ROADMAP "Tier-1 verify").  Includes the
 #                     backend parity harnesses: tests/test_backends.py (SpMM
-#                     compute backends) and tests/test_attention_backends.py
+#                     compute backends), tests/test_attention_backends.py
 #                     (decode-attention backends × model families × ragged
-#                     cache_len edges vs the dense-ref oracle).  Run one
-#                     harness alone with
+#                     cache_len edges vs the dense-ref oracle) and
+#                     tests/test_sharded_decode.py (sequence-sharded split-KV
+#                     decode over host-device meshes + the no-relayout jaxpr
+#                     gate).  Run one harness alone with
 #                       make test PYTEST_ARGS=tests/test_attention_backends.py
+#   make test-mesh    only the forced-4-device subprocess sweeps (marked
+#                     `mesh`, deselected from tier-1 by pyproject addopts);
+#                     CI's host-mesh-4 matrix entry runs this explicitly
 #   make bench-quick  CI-sized benchmark sweep + BENCH_fsi.json perf snapshot
 #                     (spmm_roofline_* + decode_attn_* rows per backend)
 #   make bench        full benchmark sweep
@@ -26,10 +31,13 @@ PY ?= python
 PYTEST_ARGS ?=
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench-quick bench schema-check docs-check lint
+.PHONY: test test-mesh bench-quick bench schema-check docs-check lint
 
 test:
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
+
+test-mesh:
+	$(PY) -m pytest -x -q -m mesh $(PYTEST_ARGS)
 
 bench-quick:
 	$(PY) -m benchmarks.run --quick --json BENCH_fsi.json

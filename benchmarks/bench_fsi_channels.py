@@ -19,9 +19,18 @@ And the mesh-sharded paper-scale fleet path (PR 3):
 * ``fsi_sharded_*`` rows sweep P≥64 fleets through the
   ``pallas-bsr-sharded`` backend — the fleet panel laid over a ``worker``
   device mesh via shard_map — at paper-scale neuron counts (quick: N=1024;
-  full adds N=16384; the N=65536 GraphChallenge size works through the same
-  path, pass ``cases=((64, 65536, 1, 4),)`` explicitly — its offline BSR
-  prep densifies 1024×65536 shards and is minutes of wall time).
+  full adds N=16384; the N=65536 GraphChallenge size runs through the same
+  path and no longer densifies its shards offline — ``bsr_from_csr`` builds
+  BSR straight from CSR block coordinates since PR 4 — pass
+  ``cases=((64, 65536, 1, 4),)`` explicitly).
+
+And the sequence-sharded decode path (PR 4):
+
+* ``decode_sharded_*`` rows time one split-KV decode step — shard-local
+  token insert + ``pallas-splitk`` ``decode_partial`` + the
+  ``combine_split_kv`` lse merge, inside shard_map — per shard count over
+  the host's devices, so ``BENCH_fsi.json`` tracks the sharded serving hot
+  path alongside the single-device ``decode_attn_*`` rows.
 """
 
 from __future__ import annotations
@@ -129,6 +138,73 @@ def bench_sharded_fleet(
     return rows
 
 
+def bench_sharded_decode(batch: int = 4, heads: int = 8, kv_heads: int = 2,
+                         seq: int = 1024, d_head: int = 64,
+                         repeats: int = 10) -> List[dict]:
+    """µs/step for one sequence-sharded split-KV decode step per shard count.
+
+    The cache is kernel-native ``[B, KV, S, D]`` (S a block_k multiple per
+    the PR 4 layout) and sharded over a 1-D ``seq`` mesh axis; every shard
+    inserts the new token iff it owns the position, runs ``pallas-splitk``
+    over its local slice, and partials merge via ``combine_split_kv`` — the
+    decode analogue of the ``fsi_sharded_*`` fleet rows."""
+    try:
+        import jax
+        import jax.numpy as jnp
+    except ModuleNotFoundError:
+        return [dict(name="decode_sharded_splitk_d1", us_per_call="",
+                     note="jax not installed")]
+
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.backends import PallasSplitKAttention
+    from repro.distributed.sharding import shard_map_compat
+    from repro.launch.mesh import make_mesh
+    from repro.models.attention import sharded_decode_attend
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((batch, 1, heads, d_head)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((batch, kv_heads, seq, d_head)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((batch, kv_heads, seq, d_head)), jnp.bfloat16)
+    k_new = jnp.asarray(rng.standard_normal((batch, kv_heads, 1, d_head)), jnp.bfloat16)
+    v_new = jnp.asarray(rng.standard_normal((batch, kv_heads, 1, d_head)), jnp.bfloat16)
+    pos = jnp.asarray(seq - seq // 8, jnp.int32)
+    be = PallasSplitKAttention()
+    flops = 2.0 * 2.0 * batch * heads * int(pos + 1) * d_head
+
+    rows = []
+    n_dev = len(jax.devices())
+    for d in (1, 2, 4, 8):
+        if d > n_dev or seq % d or (seq // d) % be.block_k_for(seq // d):
+            continue
+        mesh = make_mesh((d,), ("seq",))
+
+        def body(q, k, v, pos):
+            # the exact production recipe — shared with the model families
+            o, _, _ = sharded_decode_attend(be, q, k_new, v_new, k, v, pos,
+                                            "seq")
+            return o
+
+        kv_spec = P(None, None, "seq", None)
+        f = jax.jit(shard_map_compat(
+            body, mesh=mesh, in_specs=(P(), kv_spec, kv_spec, P()),
+            out_specs=P()))
+        np.asarray(f(q, k, v, pos))  # warmup: trace + compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            np.asarray(f(q, k, v, pos))
+        t = (time.perf_counter() - t0) / repeats
+        rows.append(dict(
+            name=f"decode_sharded_splitk_d{d}",
+            us_per_call=round(t * 1e6, 1),
+            gflops=round(flops / t / 1e9, 3),
+            shards=d, batch=batch, heads=heads, kv_heads=kv_heads,
+            seq=seq, d_head=d_head,
+        ))
+    return rows
+
+
 def run(neurons=512, layers=24, batch=64, workers=(2, 4, 8, 16),
         backends=("numpy-csr", "numpy-fast", "pallas-bsr"),
         sharded_cases=((64, 1024, 4, 16), (64, 16384, 2, 8))) -> List[dict]:
@@ -160,4 +236,5 @@ def run(neurons=512, layers=24, batch=64, workers=(2, 4, 8, 16),
     rows.extend(bench_backends(net, x0, oracle, P=max(workers),
                                backends=backends))
     rows.extend(bench_sharded_fleet(sharded_cases))
+    rows.extend(bench_sharded_decode(seq=256 if neurons <= 256 else 1024))
     return rows

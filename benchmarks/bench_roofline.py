@@ -103,9 +103,12 @@ def decode_attn_roofline(batch: int = 4, heads: int = 8, kv_heads: int = 2,
     from repro.core.backends import ATTENTION_BACKEND_NAMES, get_backend
 
     rng = np.random.default_rng(0)
+    # kernel-native [B, KV, S, D] cache layout (PR 4); `seq` is the padded
+    # capacity, so it must satisfy every backend's block_k rule (the
+    # autotune-table blocks divide 256 and 1024)
     q = jnp.asarray(rng.standard_normal((batch, 1, heads, d_head)), jnp.bfloat16)
-    k = jnp.asarray(rng.standard_normal((batch, seq, kv_heads, d_head)), jnp.bfloat16)
-    v = jnp.asarray(rng.standard_normal((batch, seq, kv_heads, d_head)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((batch, kv_heads, seq, d_head)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((batch, kv_heads, seq, d_head)), jnp.bfloat16)
     cache_len = jnp.asarray(seq - seq // 8, jnp.int32)
     # qk^T + pv over the valid prefix, fp32 accumulation
     flops = 2.0 * 2.0 * batch * heads * int(cache_len) * d_head

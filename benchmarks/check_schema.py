@@ -10,7 +10,8 @@ must fail CI instead of silently corrupting the trend.  Rules:
   must be numeric (or ``""`` with an explanatory ``note``, the "dependency
   unavailable" convention);
 * benchmark families with a timing contract (``spmm_roofline_*``,
-  ``decode_attn_*``, ``fsi_*``) must carry a timing field.
+  ``decode_attn_*``, ``decode_sharded_*``, ``fsi_*``) must carry a timing
+  field.
 
 Usage::
 
@@ -24,7 +25,7 @@ import sys
 from typing import List
 
 TIMING_FIELDS = ("us_per_call", "per_sample_ms")
-TIMED_PREFIXES = ("spmm_roofline_", "decode_attn_", "fsi_")
+TIMED_PREFIXES = ("spmm_roofline_", "decode_attn_", "decode_sharded_", "fsi_")
 
 
 def validate(payload) -> List[str]:

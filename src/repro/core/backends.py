@@ -46,9 +46,18 @@ single-token attention through one of:
   via the jit-cached ``decode_mha`` wrapper, with the cache padded to a
   ``block_k`` multiple picked from an autotune table.
 
-All three take ``(q [B,1,H,D], k_cache [B,S,KV,D], v_cache [B,S,KV,D],
-cache_len)`` and return ``[B,1,H,D]`` in ``q.dtype``; logits parity across
-backends and model families is asserted in ``tests/test_attention_backends.py``.
+All three take ``(q [B,1,H,D], k_cache [B,KV,S,D], v_cache [B,KV,S,D],
+cache_len)`` — the **kernel-native** cache layout, with the capacity ``S``
+padded at prefill per the backend's :class:`KVCacheLayout` — and return
+``[B,1,H,D]`` in ``q.dtype``.  Because the cache is already in the kernel's
+layout, ``pallas-splitk`` dispatches with zero per-step re-layout (no
+``moveaxis``/``pad`` — asserted on the jaxpr in
+``tests/test_sharded_decode.py``), and the other backends read the same
+buffers through views.  Each backend also exposes ``decode_partial`` — the
+``(out, lse)`` split-KV form — which the families' sequence-sharded decode
+branch combines across shards via ``models.attention.combine_split_kv``.
+Logits parity across backends and model families is asserted in
+``tests/test_attention_backends.py`` and (sharded) ``tests/test_sharded_decode.py``.
 
 Both registries resolve through one entry point: ``get_backend(kind, name)``
 with ``kind in {"compute", "attention"}``; the legacy one-argument form
@@ -72,6 +81,8 @@ __all__ = [
     "PallasBsrBackend",
     "PallasBsrShardedBackend",
     "AttentionBackend",
+    "KVCacheLayout",
+    "cache_layout_for",
     "DenseRefAttention",
     "ChunkedLseAttention",
     "PallasSplitKAttention",
@@ -454,24 +465,77 @@ class PallasBsrShardedBackend(PallasBsrBackend):
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class KVCacheLayout:
+    """Canonical decode KV-cache layout descriptor.
+
+    Every decoding family allocates its cache **kernel-native** —
+    ``[..., B, KV, S, D]`` with the sequence capacity ``S`` padded up to a
+    ``block_k`` multiple at prefill — so the per-step decode dispatch never
+    re-lays the cache out (the old ``moveaxis``+``pad`` in the splitk path).
+    ``block_k`` is the padding quantum: 1 for the view-based backends
+    (dense-ref / chunked-lse accept any capacity), the kernel's KV block
+    size for ``pallas-splitk``.  The descriptor is resolved once per serving
+    configuration (``AttentionBackend.cache_layout(max_len)`` /
+    ``router.route_decode_plan``) and threaded ``ServingEngine`` →
+    ``get_model`` → family ``prefill``/``decode_step``.
+    """
+
+    block_k: int = 1
+
+    def padded_len(self, max_len: int) -> int:
+        """Cache capacity for a requested ``max_len``: the next ``block_k``
+        multiple (identity when ``block_k == 1``)."""
+        bk = max(1, int(self.block_k))
+        return -(-max(int(max_len), 1) // bk) * bk
+
+    def check_capacity(self, seq_cap: int) -> None:
+        if seq_cap % max(1, int(self.block_k)):
+            raise ValueError(
+                f"KV cache capacity {seq_cap} is not a multiple of "
+                f"block_k={self.block_k}; pad the cache at prefill with "
+                f"KVCacheLayout.padded_len (ServingEngine does this)")
+
+
+def cache_layout_for(backend, max_len: int) -> KVCacheLayout:
+    """The :class:`KVCacheLayout` a backend instance wants for a cache of
+    capacity ``max_len`` (identity layout for duck-typed externals)."""
+    fn = getattr(backend, "cache_layout", None)
+    return fn(max_len) if fn is not None else KVCacheLayout()
+
+
 class AttentionBackend(Protocol):
     """Single-token decode attention over a preallocated KV cache.
 
     Implementations must be pure jax-traceable callables so the serving
     engine can close over one instance inside its jitted ``decode_step``:
-    the backend choice is static, ``cache_len`` is traced.
+    the backend choice is static, ``cache_len`` is traced.  Caches arrive in
+    the canonical :class:`KVCacheLayout` — ``[B, KV, S, D]`` with ``S``
+    already padded per ``cache_layout(max_len)``.
     """
 
     name: str
 
+    def cache_layout(self, max_len: int) -> KVCacheLayout:
+        """Layout (padding rule) this backend needs for capacity ``max_len``."""
+        ...
+
     def decode(
         self,
         q: Any,          # [B, 1, H, D] — one new token's query heads
-        k_cache: Any,    # [B, S, KV, D] cache padded to capacity S
-        v_cache: Any,    # [B, S, KV, D]
+        k_cache: Any,    # [B, KV, S, D] cache padded to capacity S
+        v_cache: Any,    # [B, KV, S, D]
         cache_len: Any,  # valid prefix length (traced scalar or int)
     ) -> Any:
         """Returns attention output [B, 1, H, D] in ``q.dtype``."""
+        ...
+
+    def decode_partial(
+        self, q: Any, k_cache: Any, v_cache: Any, cache_len: Any
+    ) -> Any:
+        """Split-KV form over a (possibly shard-local) cache slice: returns
+        ``(out [B,1,H,D] fp32 normalized partial, lse [B,1,H] fp32)`` for the
+        cross-shard ``combine_split_kv`` merge."""
         ...
 
 
@@ -489,10 +553,19 @@ class DenseRefAttention:
     def state_key(self) -> str:
         return self.name
 
+    def cache_layout(self, max_len: int) -> KVCacheLayout:
+        return KVCacheLayout(block_k=1)
+
     def decode(self, q, k_cache, v_cache, cache_len):
         from repro.models.attention import decode_attention_dense
 
         return decode_attention_dense(q, k_cache, v_cache, cache_len)
+
+    def decode_partial(self, q, k_cache, v_cache, cache_len):
+        from repro.models.attention import decode_attention_dense
+
+        return decode_attention_dense(q, k_cache, v_cache, cache_len,
+                                      return_lse=True)
 
 
 class ChunkedLseAttention:
@@ -509,12 +582,23 @@ class ChunkedLseAttention:
     def state_key(self) -> str:
         return f"{self.name}:kc{self.kv_chunk}"
 
+    def cache_layout(self, max_len: int) -> KVCacheLayout:
+        return KVCacheLayout(block_k=1)
+
     def decode(self, q, k_cache, v_cache, cache_len):
         from repro.models.attention import decode_attention
 
         return decode_attention(
             q, k_cache, v_cache, cache_len=cache_len, kv_chunk=self.kv_chunk
         ).astype(q.dtype)
+
+    def decode_partial(self, q, k_cache, v_cache, cache_len):
+        from repro.models.attention import decode_attention
+
+        return decode_attention(
+            q, k_cache, v_cache, cache_len=cache_len, kv_chunk=self.kv_chunk,
+            return_lse=True,
+        )
 
 
 # (padded cache length upper bound, block_k) — smallest block that keeps the
@@ -530,8 +614,11 @@ SPLITK_BLOCK_K_TABLE: Tuple[Tuple[Optional[int], int], ...] = (
 class PallasSplitKAttention:
     """Split-KV flash-decode Pallas kernel via the jit-cached ``decode_mha``.
 
-    The cache capacity ``S`` is padded up to a multiple of ``block_k`` (the
-    kernel requires ``block_k | S``); padded positions sit beyond
+    The cache arrives **already kernel-native**: ``[B, KV, S, D]`` with ``S``
+    a ``block_k`` multiple (the layout :meth:`cache_layout` asks prefill to
+    allocate), so the dispatch is a straight ``decode_mha`` call — the old
+    per-step ``moveaxis``+``pad`` re-layout is gone (jaxpr-asserted in
+    ``tests/test_sharded_decode.py``).  Padded positions sit beyond
     ``cache_len`` so the in-kernel mask zeroes them.  ``block_k`` comes from
     :data:`SPLITK_BLOCK_K_TABLE` unless pinned, and ``interpret=None`` defers
     to the platform default (compiled on TPU, interpreter elsewhere).  Since
@@ -561,25 +648,31 @@ class PallasSplitKAttention:
                 return bk
         raise AssertionError("unreachable")  # pragma: no cover
 
+    def cache_layout(self, max_len: int) -> KVCacheLayout:
+        # The autotune table is bucketed on bounds that are multiples of
+        # their own block_k, so padded_len never crosses into a bucket with
+        # a different block size: block_k_for(padded) == block_k_for(max_len).
+        return KVCacheLayout(block_k=self.block_k_for(max(int(max_len), 1)))
+
     def decode(self, q, k_cache, v_cache, cache_len):
+        out, _ = self.decode_partial(q, k_cache, v_cache, cache_len)
+        return out.astype(q.dtype)
+
+    def decode_partial(self, q, k_cache, v_cache, cache_len):
         import jax.numpy as jnp
 
         from repro.kernels.decode_attention.ops import decode_mha
 
-        S = k_cache.shape[1]
+        S = k_cache.shape[2]
+        self.cache_layout(S).check_capacity(S)  # no silent per-step re-pad
         bk = self.block_k_for(S)
-        pad = -(-S // bk) * bk - S
-        kT = jnp.moveaxis(k_cache, 1, 2)        # [B, KV, S, D]
-        vT = jnp.moveaxis(v_cache, 1, 2)
-        if pad:
-            widths = ((0, 0), (0, 0), (0, pad), (0, 0))
-            kT = jnp.pad(kT, widths)
-            vT = jnp.pad(vT, widths)
-        out, _ = decode_mha(
-            q[:, 0], kT, vT, jnp.asarray(cache_len, jnp.int32),
+        B, _, H, D = q.shape
+        out, lse = decode_mha(
+            q.reshape(B, H, D), k_cache, v_cache,
+            jnp.asarray(cache_len, jnp.int32),
             block_k=bk, interpret=self.interpret,
         )
-        return out[:, None].astype(q.dtype)
+        return out[:, None], lse[:, None]
 
 
 # ---------------------------------------------------------------------------

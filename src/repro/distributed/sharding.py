@@ -271,7 +271,8 @@ def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, cache_tree: PyTree,
                  ax: MeshAxes) -> PyTree:
     """Decode-cache specs: mirror registry.cache_specs structurally.
 
-    KV arrays [..., B, S, KV, dh]: B→dp, S→model (+leftover dp when B=1).
+    KV arrays [..., B, KV, S, dh] (kernel-native layout): B→dp, S→model
+    (+leftover dp when B=1) — the split-KV decode sharding.
     SSM states [..., B, H, P, N]: H→model when divisible.
     Conv tails [..., B, K-1, C]: C→model for the x-conv when divisible.
     """
@@ -283,10 +284,10 @@ def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, cache_tree: PyTree,
 
     def kv_spec(leaf, s_dim_size):
         ndim = len(leaf.shape)
-        # [..., B, S, KV, dh]
+        # [..., B, KV, S, dh]
         lead = ndim - 4
         seq = _divisible_prefix(seq_axes, s_dim_size, ax)
-        return P(*([None] * lead), dp, seq if seq else None, None, None)
+        return P(*([None] * lead), dp, None, seq if seq else None, None)
 
     def ssm_spec(leaf):
         ndim = len(leaf.shape)
@@ -313,7 +314,7 @@ def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, cache_tree: PyTree,
         if name in ("k", "v", "kc", "vc") or (
             "kv" in names and ndim >= 4
         ) or ("tail_kv" in names and ndim >= 4):
-            return kv_spec(leaf, leaf.shape[-3])
+            return kv_spec(leaf, leaf.shape[-2])
         if name == "ssm" or ("states" in names and ndim >= 4 and
                              leaf.shape[-1] == cfg.ssm_state):
             return ssm_spec(leaf)

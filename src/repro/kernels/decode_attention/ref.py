@@ -8,11 +8,15 @@ from repro.models.attention import decode_attention as model_decode_attention
 
 
 def decode_attention_ref(q, k_cache, v_cache, cache_len):
-    """q [B,H,D], caches [B,KV,S,D] → (out [B,H,D], lse [B,H])."""
+    """q [B,H,D], caches [B,KV,S,D] → (out [B,H,D], lse [B,H]).
+
+    The model-level chunked scan consumes the kernel-native layout directly
+    (PR 4), so the oracle is a straight call.
+    """
     out, lse = model_decode_attention(
         q[:, None],                          # [B,1,H,D]
-        k_cache.transpose(0, 2, 1, 3),       # [B,S,KV,D]
-        v_cache.transpose(0, 2, 1, 3),
+        k_cache,
+        v_cache,
         cache_len=jnp.asarray(cache_len),
         return_lse=True,
     )

@@ -12,6 +12,12 @@ Three entry points:
   psum-combined by the caller (split-KV / flash-decoding).
 * :func:`full_attention` — naive reference for tests.
 
+Decode caches use the **kernel-native** layout ``[B, KV, S, D]`` (the
+``kernels/decode_attention`` block layout) end-to-end: every decode entry
+point here consumes that layout directly, so the Pallas split-KV kernel, the
+dense oracle and the chunked scan all read the same buffers without a
+per-step re-layout (prefill writes the cache in this layout once).
+
 All math accumulates in fp32.
 """
 
@@ -134,13 +140,13 @@ def chunked_causal_attention(
 
 def decode_attention(
     q: jnp.ndarray,             # [B, 1, H, D] — one new token
-    k_cache: jnp.ndarray,       # [B, S, KV, D] (local shard if seq-sharded)
-    v_cache: jnp.ndarray,       # [B, S, KV, D]
+    k_cache: jnp.ndarray,       # [B, KV, S, D] (local shard if seq-sharded)
+    v_cache: jnp.ndarray,       # [B, KV, S, D]
     cache_len: Optional[jnp.ndarray] = None,  # valid prefix length (≤ S)
     kv_chunk: int = 2048,
     return_lse: bool = False,
 ) -> jnp.ndarray | Tuple[jnp.ndarray, jnp.ndarray]:
-    """Streaming single-token attention over the KV cache.
+    """Streaming single-token attention over the kernel-native KV cache.
 
     With ``return_lse=True`` returns the *normalized* partial output plus its
     logsumexp, so a sequence-sharded caller combines partials across devices
@@ -149,16 +155,16 @@ def decode_attention(
     — the split-KV / flash-decoding scheme.
     """
     B, _, H, D = q.shape
-    S, KV = k_cache.shape[1], k_cache.shape[2]
+    KV, S = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
     kv_chunk = min(kv_chunk, S)
     n_k = -(-S // kv_chunk)
     pad = n_k * kv_chunk - S
     if pad:
-        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    ks = k_cache.reshape(B, n_k, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
-    vs = v_cache.reshape(B, n_k, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    ks = k_cache.reshape(B, KV, n_k, kv_chunk, D).transpose(2, 0, 1, 3, 4)
+    vs = v_cache.reshape(B, KV, n_k, kv_chunk, D).transpose(2, 0, 1, 3, 4)
     qg = q.reshape(B, KV, G, D)
     scale = 1.0 / jnp.sqrt(D).astype(ACC)
     if cache_len is None:
@@ -195,10 +201,11 @@ def decode_attention(
 
 def decode_attention_dense(
     q: jnp.ndarray,             # [B, 1, H, D]
-    k_cache: jnp.ndarray,       # [B, S, KV, D]
-    v_cache: jnp.ndarray,       # [B, S, KV, D]
+    k_cache: jnp.ndarray,       # [B, KV, S, D]
+    v_cache: jnp.ndarray,       # [B, KV, S, D]
     cache_len,                  # valid prefix length
-) -> jnp.ndarray:
+    return_lse: bool = False,
+) -> jnp.ndarray | Tuple[jnp.ndarray, jnp.ndarray]:
     """Single-token attention over the full cache, no chunking.
 
     Under pjit this is the *sequence-shardable* decode path: the scores
@@ -206,21 +213,28 @@ def decode_attention_dense(
     partial softmax + all-reduce — exactly split-KV decode, chosen by the
     compiler instead of hand-written scans (which would reshape the sharded
     dim and force all-gathers).  Memory is fine because Sq = 1.
+
+    ``return_lse=True`` returns ``(out [B,1,H,D] fp32 normalized partial,
+    lse [B,1,H])`` for the explicit shard_map split-KV combine
+    (:func:`combine_split_kv`).
     """
     B, _, H, D = q.shape
-    S, KV = k_cache.shape[1], k_cache.shape[2]
+    KV, S = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
     qg = q.reshape(B, 1, KV, G, D)
     scale = 1.0 / jnp.sqrt(D).astype(ACC)
-    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+    s = jnp.einsum("bqkgd,bksd->bkgqs", qg, k_cache,
                    preferred_element_type=ACC) * scale
     valid = jnp.arange(S) < cache_len
     s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
     m = s.max(axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     l = p.sum(axis=-1, keepdims=True)
-    out = jnp.einsum("bkgqs,bskd->bqkgd", (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+    out = jnp.einsum("bkgqs,bksd->bqkgd", (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
                      v_cache, preferred_element_type=ACC)
+    if return_lse:
+        lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0, 0]  # [B, KV, G]
+        return out.reshape(B, 1, H, D), lse.reshape(B, 1, H)
     return out.reshape(B, 1, H, D).astype(q.dtype)
 
 
@@ -229,9 +243,76 @@ def combine_split_kv(
     lse: jnp.ndarray,           # [B, 1, H] local logsumexp
     axis_names,
 ) -> jnp.ndarray:
-    """Cross-device combine for sequence-sharded decode (inside shard_map)."""
+    """Cross-device combine for sequence-sharded decode (inside shard_map).
+
+    Shards with no valid positions contribute ``lse ≈ -inf`` → weight 0, so
+    ragged ``cache_len`` never poisons the merge.  The combine is associative
+    in exact arithmetic; shard-count invariance in fp32 is property-tested in
+    ``tests/test_sharded_decode.py``.
+    """
     m = jax.lax.pmax(lse, axis_names)
     w = jnp.exp(lse - m)
     num = jax.lax.psum(out * w[..., None], axis_names)
     den = jax.lax.psum(w, axis_names)
     return num / jnp.maximum(den[..., None], 1e-30)
+
+
+def combine_split_kv_stacked(outs: jnp.ndarray, lses: jnp.ndarray) -> jnp.ndarray:
+    """Host-side mirror of :func:`combine_split_kv` over a leading shard
+    axis: ``outs [n, B, 1, H, D]``, ``lses [n, B, 1, H]`` → ``[B, 1, H, D]``.
+    Used by the shard-count-invariance property tests and single-process
+    split-KV emulation (the math is identical; ``psum``/``pmax`` become
+    ``sum``/``max`` over axis 0)."""
+    m = lses.max(axis=0)
+    w = jnp.exp(lses - m)
+    num = (outs * w[..., None]).sum(axis=0)
+    den = w.sum(axis=0)
+    return num / jnp.maximum(den[..., None], 1e-30)
+
+
+def seq_shard_bounds(axis_names, s_local: int):
+    """(offset, shard index) of this device's KV-cache sequence slice.
+
+    Valid only inside a ``shard_map``/manual region where ``axis_names`` are
+    bound.  Multiple axes compose row-major (the order the cache's S dim was
+    sharded over), matching ``PartitionSpec((a, b))`` layout.
+    """
+    names = (axis_names if isinstance(axis_names, (tuple, list))
+             else (axis_names,))
+    idx = jnp.zeros((), jnp.int32)
+    for a in names:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx * s_local, idx
+
+
+def insert_kv_local(cache: jnp.ndarray, update: jnp.ndarray, local_pos,
+                    owned) -> jnp.ndarray:
+    """Write a one-token KV update into a shard-local ``[B, KV, S_loc, D]``
+    cache at ``local_pos``, as a no-op on shards that don't own the global
+    position (``owned`` False): the surrounding values are read back and
+    re-written so the buffer is bit-unchanged."""
+    start = (0, 0, jnp.asarray(local_pos, jnp.int32), 0)
+    cur = jax.lax.dynamic_slice(cache, start, update.shape)
+    return jax.lax.dynamic_update_slice(
+        cache, jnp.where(owned, update, cur), start)
+
+
+def sharded_decode_attend(attn, q, k_new, v_new, k_cache, v_cache, pos,
+                          axis_names):
+    """The sequence-sharded decode op, start to finish (inside shard_map):
+    insert the new token's ``[B, KV, 1, D]`` KV on the shard owning global
+    position ``pos``, run the backend's split-KV form over the local slice
+    with the shard-local valid prefix, and lse-combine partials across
+    ``axis_names``.  Returns ``(o [B,1,H,D] fp32, k_cache, v_cache)``.
+    This is THE hot-path recipe — the model families, the op-level parity
+    tests and the ``decode_sharded_*`` bench all call it, so they can never
+    drift apart."""
+    s_local = k_cache.shape[2]
+    offset, _ = seq_shard_bounds(axis_names, s_local)
+    local_pos = jnp.clip(pos - offset, 0, s_local - 1)
+    owned = (pos >= offset) & (pos - offset < s_local)
+    k_cache = insert_kv_local(k_cache, k_new, local_pos, owned)
+    v_cache = insert_kv_local(v_cache, v_new, local_pos, owned)
+    local_len = jnp.clip(pos + 1 - offset, 0, s_local)
+    o, lse = attn.decode_partial(q, k_cache, v_cache, cache_len=local_len)
+    return combine_split_kv(o, lse, axis_names), k_cache, v_cache

@@ -10,15 +10,17 @@ serving); the encoder has no decode step.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.backends import get_backend
+from repro.core.backends import KVCacheLayout, get_backend
 from repro.models import layers as L
 from repro.models.attention import chunked_causal_attention
+from repro.models.kvcache import pad_kv_to_layout
+from repro.models.transformer import _decode_attn
 
 PyTree = Any
 ACC = jnp.float32
@@ -135,15 +137,18 @@ def loss_fn(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
 
 
 def prefill(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
-            max_len: int) -> Tuple[jnp.ndarray, PyTree]:
-    """Encode source + run decoder prompt; cache self-KV (padded) + cross-KV."""
+            max_len: int,
+            layout: KVCacheLayout = KVCacheLayout()) -> Tuple[jnp.ndarray, PyTree]:
+    """Encode source + run decoder prompt; cache self-KV + cross-KV, both in
+    the kernel-native [B, KV, S, D] layout (cross capacity padded to the
+    same ``layout`` quantum; its true length rides along as ``src_length``)."""
     memory = encode(params, batch["frames"], cfg)
     tokens = batch["tokens"]
     x = L.embed_tokens(params["embed"], tokens)
     B, S, _ = x.shape
     positions = jnp.arange(S)[None, :].repeat(B, axis=0)
     mem_positions = jnp.arange(memory.shape[1])[None, :].repeat(B, axis=0)
-    pad = max_len - S
+    s_src = memory.shape[1]
 
     def body(h, blk):
         a = L.rms_norm(h, blk["ln_self"], cfg.norm_eps)
@@ -163,9 +168,11 @@ def prefill(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
         h = h + L.out_project(blk["cross_attn"], oc, h.dtype)
         m = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
         h = h + L.mlp(blk["mlp"], m)
-        k_pad = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v_pad = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        return h, (k_pad, v_pad, kc, vc)
+        k_pad = pad_kv_to_layout(k, max_len, layout)
+        v_pad = pad_kv_to_layout(v, max_len, layout)
+        kc_pad = pad_kv_to_layout(kc, s_src, layout)
+        vc_pad = pad_kv_to_layout(vc, s_src, layout)
+        return h, (k_pad, v_pad, kc_pad, vc_pad)
 
     if cfg.remat:
         body = jax.checkpoint(body, prevent_cse=False)
@@ -173,16 +180,28 @@ def prefill(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = L.unembed(x[:, -1:], params["embed"])
     cache = {"k": ks, "v": vs, "kc": kcs, "vc": vcs,
-             "length": jnp.asarray(S, jnp.int32)}
+             "length": jnp.asarray(S, jnp.int32),
+             "src_length": jnp.asarray(s_src, jnp.int32)}
     return logits, cache
 
 
 def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
-                cfg: ModelConfig, attn_backend=None) -> Tuple[jnp.ndarray, PyTree]:
+                cfg: ModelConfig, attn_backend=None, seq_shard_axes=None,
+                layout: Optional[KVCacheLayout] = None) -> Tuple[jnp.ndarray, PyTree]:
+    """Decoder step.  Only the growing self-attention cache participates in
+    sequence sharding (``seq_shard_axes``); the precomputed cross-attention
+    KV stays replicated and decodes locally against ``src_length`` valid
+    positions (its capacity may be padded past the true source length)."""
     attn = get_backend("attention", attn_backend)
+    if layout is not None:
+        layout.check_capacity(int(cache["k"].shape[3]))
+        layout.check_capacity(int(cache["kc"].shape[3]))
     x = L.embed_tokens(params["embed"], token)
     B = x.shape[0]
     pos = cache["length"]
+    src_len = cache.get("src_length")
+    if src_len is None:  # legacy caches: capacity == true source length
+        src_len = cache["kc"].shape[3]
     positions = jnp.full((B, 1), pos, dtype=jnp.int32)
 
     def body(h, inp):
@@ -191,16 +210,13 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
         q, k, v = L.qkv_project(blk["self_attn"], a)
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
-        kc_self = jax.lax.dynamic_update_slice(
-            kc_self, k.astype(kc_self.dtype), (0, pos, 0, 0))
-        vc_self = jax.lax.dynamic_update_slice(
-            vc_self, v.astype(vc_self.dtype), (0, pos, 0, 0))
-        o = attn.decode(q, kc_self, vc_self, cache_len=pos + 1)
+        o, kc_self, vc_self = _decode_attn(
+            attn, q, k, v, kc_self, vc_self, pos, seq_shard_axes)
         h = h + L.out_project(blk["self_attn"], o.astype(h.dtype), h.dtype)
         c = L.rms_norm(h, blk["ln_cross"], cfg.norm_eps)
         qc = jnp.einsum("bsd,dhk->bshk", c, blk["cross_attn"]["wq"],
                         preferred_element_type=ACC).astype(h.dtype)
-        oc = attn.decode(qc, kc_cross, vc_cross, cache_len=kc_cross.shape[1])
+        oc = attn.decode(qc, kc_cross, vc_cross, cache_len=src_len)
         h = h + L.out_project(blk["cross_attn"], oc.astype(h.dtype), h.dtype)
         m = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
         h = h + L.mlp(blk["mlp"], m)
@@ -213,4 +229,5 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = L.unembed(x, params["embed"])
     return logits, {"k": ks, "v": vs, "kc": cache["kc"], "vc": cache["vc"],
-                    "length": pos + 1}
+                    "length": pos + 1,
+                    "src_length": jnp.asarray(src_len, jnp.int32)}

@@ -22,10 +22,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.backends import get_backend
+from repro.core.backends import KVCacheLayout, get_backend
 from repro.models import layers as L
 from repro.models import mamba2 as M2
 from repro.models.attention import chunked_causal_attention
+from repro.models.kvcache import pad_kv_to_layout
+from repro.models.transformer import _decode_attn
 
 PyTree = Any
 ACC = jnp.float32
@@ -113,7 +115,8 @@ def shared_block_train(shared: PyTree, h: jnp.ndarray, emb: jnp.ndarray,
     return h + out
 
 
-def shared_block_prefill(shared, h, emb, cfg, positions, max_len):
+def shared_block_prefill(shared, h, emb, cfg, positions, max_len,
+                         layout: KVCacheLayout = KVCacheLayout()):
     xin = jnp.concatenate([h, emb], axis=-1)
     a = L.rms_norm(xin, shared["ln_attn"], cfg.norm_eps)
     q, k, v = L.qkv_project(shared["attn"], a)
@@ -130,25 +133,21 @@ def shared_block_prefill(shared, h, emb, cfg, positions, max_len):
     hm = (jax.nn.silu(gate) * up).astype(h.dtype)
     h2 = h2 + jnp.einsum("bsf,fd->bsd", hm, shared["mlp"]["wo"],
                          preferred_element_type=ACC).astype(h.dtype)
-    pad = max_len - k.shape[1]
-    k_pad = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    v_pad = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k_pad = pad_kv_to_layout(k, max_len, layout)
+    v_pad = pad_kv_to_layout(v, max_len, layout)
     return h2, (k_pad, v_pad)
 
 
 def shared_block_decode(shared, h, emb, cfg, positions, k_cache, v_cache, pos,
-                        attn=None):
+                        attn=None, seq_shard_axes=None):
     attn = attn if attn is not None else get_backend("attention", None)
     xin = jnp.concatenate([h, emb], axis=-1)
     a = L.rms_norm(xin, shared["ln_attn"], cfg.norm_eps)
     q, k, v = L.qkv_project(shared["attn"], a)
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
-    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
-                                           (0, pos, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
-                                           (0, pos, 0, 0))
-    o = attn.decode(q, k_cache, v_cache, cache_len=pos + 1)
+    o, k_cache, v_cache = _decode_attn(
+        attn, q, k, v, k_cache, v_cache, pos, seq_shard_axes)
     h2 = h + L.out_project(shared["attn"], o.astype(h.dtype), h.dtype)
     m = L.rms_norm(jnp.concatenate([h2, emb], axis=-1), shared["ln_mlp"],
                    cfg.norm_eps)
@@ -215,7 +214,8 @@ def loss_fn(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
 
 
 def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
-            max_len: int) -> Tuple[jnp.ndarray, PyTree]:
+            max_len: int,
+            layout: KVCacheLayout = KVCacheLayout()) -> Tuple[jnp.ndarray, PyTree]:
     emb = L.embed_tokens(params["embed"], tokens)
     x = emb
     B, S, _ = x.shape
@@ -223,7 +223,7 @@ def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
 
     def group_body(h, group_blocks):
         h, kv = shared_block_prefill(params["shared"], h, emb, cfg, positions,
-                                     max_len)
+                                     max_len, layout)
 
         def mamba_body(hh, blk):
             h2, conv_s, ssm_s = M2.block_apply(blk, hh, cfg)
@@ -240,7 +240,7 @@ def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
     tail_kv = None
     if params.get("tail") is not None:
         x, tail_kv = shared_block_prefill(params["shared"], x, emb, cfg,
-                                          positions, max_len)
+                                          positions, max_len, layout)
 
         def mamba_body(hh, blk):
             h2, conv_s, ssm_s = M2.block_apply(blk, hh, cfg)
@@ -261,8 +261,11 @@ def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
 
 
 def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
-                cfg: ModelConfig, attn_backend=None) -> Tuple[jnp.ndarray, PyTree]:
+                cfg: ModelConfig, attn_backend=None, seq_shard_axes=None,
+                layout: Optional[KVCacheLayout] = None) -> Tuple[jnp.ndarray, PyTree]:
     attn = get_backend("attention", attn_backend)
+    if layout is not None:
+        layout.check_capacity(int(cache["kv"][0].shape[3]))
     emb = L.embed_tokens(params["embed"], token)
     x = emb
     B = x.shape[0]
@@ -272,7 +275,8 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
     def group_body(h, inp):
         group_blocks, (kc, vc), (conv_s, ssm_s) = inp
         h, (kc, vc) = shared_block_decode(params["shared"], h, emb, cfg,
-                                          positions, kc, vc, pos, attn=attn)
+                                          positions, kc, vc, pos, attn=attn,
+                                          seq_shard_axes=seq_shard_axes)
 
         def mamba_body(hh, blk_state):
             blk, cs, ss = blk_state
@@ -291,7 +295,8 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
     if params.get("tail") is not None:
         x, tail_kv = shared_block_decode(params["shared"], x, emb, cfg,
                                          positions, tail_kv[0], tail_kv[1], pos,
-                                         attn=attn)
+                                         attn=attn,
+                                         seq_shard_axes=seq_shard_axes)
 
         def mamba_body(hh, blk_state):
             blk, cs, ss = blk_state

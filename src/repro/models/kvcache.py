@@ -1,7 +1,11 @@
 """KV / SSM state caches for serving.
 
-Layouts:
-* attention KV:   {"k": [L, B, S_max, KV, D], "v": same, "length": scalar}
+Layouts (kernel-native, PR 4):
+* attention KV:   {"k": [L, B, KV, S_cap, D], "v": same, "length": scalar}
+  — the ``kernels/decode_attention`` block layout, with the capacity
+  ``S_cap`` padded to the attention backend's ``block_k`` multiple at
+  prefill (:class:`repro.core.backends.KVCacheLayout`), so the per-step
+  decode dispatch reads the buffers as-is: no ``moveaxis``/``pad``.
 * mamba2 state:   {"ssm": [L, B, H, P, N], "conv": [L, B, K-1, C], "length"}
 * zamba2 shared-attention sites get their own KV stack indexed by site.
 
@@ -15,14 +19,19 @@ from typing import Dict
 
 import jax.numpy as jnp
 
+from repro.core.backends import KVCacheLayout
+
 PyTree = Dict[str, jnp.ndarray]
+
+__all__ = ["KVCacheLayout", "init_attn_cache", "init_ssm_cache",
+           "update_layer_kv", "pad_kv_to_layout"]
 
 
 def init_attn_cache(
     n_layers: int, batch: int, max_len: int, n_kv: int, d_head: int,
-    dtype=jnp.bfloat16,
+    dtype=jnp.bfloat16, layout: KVCacheLayout = KVCacheLayout(),
 ) -> PyTree:
-    shape = (n_layers, batch, max_len, n_kv, d_head)
+    shape = (n_layers, batch, n_kv, layout.padded_len(max_len), d_head)
     return {
         "k": jnp.zeros(shape, dtype=dtype),
         "v": jnp.zeros(shape, dtype=dtype),
@@ -41,15 +50,32 @@ def init_ssm_cache(
     }
 
 
+def pad_kv_to_layout(k: jnp.ndarray, max_len: int,
+                     layout: KVCacheLayout = KVCacheLayout()) -> jnp.ndarray:
+    """[B, S, KV, D] prefill projections → kernel-native [B, KV, S_cap, D].
+
+    One transpose + pad at prefill buys a re-layout-free decode loop: the
+    capacity is ``layout.padded_len(max_len)`` and positions ≥ the running
+    ``length`` stay zero until decode writes them.
+    """
+    k = jnp.moveaxis(k, 1, 2)
+    pad = layout.padded_len(max_len) - k.shape[2]
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return k
+
+
 def update_layer_kv(cache: PyTree, layer: int, k_new, v_new, position) -> PyTree:
     """Insert [B, S_new, KV, D] at sequence offset ``position`` of ``layer``."""
     import jax.lax as lax
 
     zeros = jnp.zeros((), jnp.int32)
-    idx = (jnp.asarray(layer, jnp.int32), zeros, jnp.asarray(position, jnp.int32),
-           zeros, zeros)
+    idx = (jnp.asarray(layer, jnp.int32), zeros, zeros,
+           jnp.asarray(position, jnp.int32), zeros)
+    k_new = jnp.moveaxis(k_new, 1, 2)[None].astype(cache["k"].dtype)
+    v_new = jnp.moveaxis(v_new, 1, 2)[None].astype(cache["v"].dtype)
     return {
         **cache,
-        "k": lax.dynamic_update_slice(cache["k"], k_new[None].astype(cache["k"].dtype), idx),
-        "v": lax.dynamic_update_slice(cache["v"], v_new[None].astype(cache["v"].dtype), idx),
+        "k": lax.dynamic_update_slice(cache["k"], k_new, idx),
+        "v": lax.dynamic_update_slice(cache["v"], v_new, idx),
     }

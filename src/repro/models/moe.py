@@ -28,9 +28,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.backends import get_backend
+from repro.core.backends import KVCacheLayout, get_backend
 from repro.models import layers as L
 from repro.models.attention import chunked_causal_attention
+from repro.models.kvcache import pad_kv_to_layout
 from repro.models import transformer as TF
 
 PyTree = Any
@@ -386,11 +387,11 @@ def _stacked_blocks(params):
 
 
 def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
-            max_len: int, dp_groups: int = 1) -> Tuple[jnp.ndarray, PyTree]:
+            max_len: int, dp_groups: int = 1,
+            layout: KVCacheLayout = KVCacheLayout()) -> Tuple[jnp.ndarray, PyTree]:
     x = L.embed_tokens(params["embed"], tokens)
     B, S, _ = x.shape
     positions = jnp.arange(S)[None, :].repeat(B, axis=0)
-    pad = max_len - S
     caches = []
 
     for blocks in _stacked_blocks(params):
@@ -407,8 +408,8 @@ def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
             else:
                 out, _ = moe_ffn_dispatch(blk["moe"], hm, cfg, dp_groups)
                 h = h + out
-            k_pad = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            v_pad = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k_pad = pad_kv_to_layout(k, max_len, layout)
+            v_pad = pad_kv_to_layout(v, max_len, layout)
             return h, (k_pad.astype(DECODE_CACHE_DTYPE),
                        v_pad.astype(DECODE_CACHE_DTYPE))
 
@@ -426,8 +427,11 @@ def prefill(params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig,
 
 def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
                 cfg: ModelConfig, dp_groups: int = 1,
-                attn_backend=None) -> Tuple[jnp.ndarray, PyTree]:
+                attn_backend=None, seq_shard_axes=None,
+                layout: Optional[KVCacheLayout] = None) -> Tuple[jnp.ndarray, PyTree]:
     attn = get_backend("attention", attn_backend)
+    if layout is not None:
+        layout.check_capacity(int(cache["stacks"][-1]["k"].shape[3]))
     x = L.embed_tokens(params["embed"], token)
     B = x.shape[0]
     pos = cache["length"]
@@ -441,11 +445,8 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
             q, k, v = L.qkv_project(blk["attn"], hn)
             q = L.apply_rope(q, positions, cfg.rope_theta)
             k = L.apply_rope(k, positions, cfg.rope_theta)
-            k_cache = jax.lax.dynamic_update_slice(
-                k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
-            v_cache = jax.lax.dynamic_update_slice(
-                v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
-            o = attn.decode(q, k_cache, v_cache, cache_len=pos + 1)
+            o, k_cache, v_cache = TF._decode_attn(
+                attn, q, k, v, k_cache, v_cache, pos, seq_shard_axes)
             h = h + L.out_project(blk["attn"], o.astype(h.dtype), h.dtype)
             hm = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
             if blk.get("mlp") is not None:

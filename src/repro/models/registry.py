@@ -38,12 +38,18 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
     ``attn_backend`` — :class:`repro.core.backends.AttentionBackend` name or
     instance used by every decode step of the attention-bearing families
     (``None`` → ``dense-ref``, the oracle).  Resolved once here so all jitted
-    decode closures share a single static instance.
+    decode closures share a single static instance.  The backend's
+    :class:`KVCacheLayout` (the kernel-native [B, KV, S, D] cache layout +
+    block_k padding rule) is derived from the static ``max_len`` at prefill
+    trace time and threaded into every family's ``prefill``; decode closures
+    accept the family's extra kwargs (``seq_shard_axes=...`` for the
+    sequence-sharded split-KV branch) as pass-through.
     """
-    from repro.core.backends import get_backend
+    from repro.core.backends import cache_layout_for, get_backend
 
     fam = cfg.family
     attn = get_backend("attention", attn_backend) if fam != "ssm" else None
+    layout = lambda max_len: cache_layout_for(attn, max_len)
     if fam in ("dense",):
         return ModelApi(
             cfg=cfg,
@@ -51,9 +57,9 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
             loss_fn=lambda p, b: transformer.loss_fn(p, b, cfg),
             forward=lambda p, b: transformer.forward(p, b["tokens"], cfg),
             prefill=lambda p, b, max_len: transformer.prefill(
-                p, b["tokens"], cfg, max_len),
-            decode_step=lambda p, t, c: transformer.decode_step(
-                p, t, c, cfg, attn_backend=attn),
+                p, b["tokens"], cfg, max_len, layout=layout(max_len)),
+            decode_step=lambda p, t, c, **kw: transformer.decode_step(
+                p, t, c, cfg, attn_backend=attn, **kw),
         )
     if fam == "vlm":
         return ModelApi(
@@ -63,9 +69,10 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
             forward=lambda p, b: transformer.forward(
                 p, b["tokens"], cfg, extra_embeds=b["extra_embeds"]),
             prefill=lambda p, b, max_len: transformer.prefill(
-                p, b["tokens"], cfg, max_len, extra_embeds=b["extra_embeds"]),
-            decode_step=lambda p, t, c: transformer.decode_step(
-                p, t, c, cfg, attn_backend=attn),
+                p, b["tokens"], cfg, max_len, extra_embeds=b["extra_embeds"],
+                layout=layout(max_len)),
+            decode_step=lambda p, t, c, **kw: transformer.decode_step(
+                p, t, c, cfg, attn_backend=attn, **kw),
         )
     if fam == "moe":
         return ModelApi(
@@ -75,9 +82,10 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
             forward=lambda p, b, dp_groups=1: moe.forward(
                 p, b["tokens"], cfg, dp_groups)[0],
             prefill=lambda p, b, max_len, dp_groups=1: moe.prefill(
-                p, b["tokens"], cfg, max_len, dp_groups),
-            decode_step=lambda p, t, c, dp_groups=1: moe.decode_step(
-                p, t, c, cfg, dp_groups, attn_backend=attn),
+                p, b["tokens"], cfg, max_len, dp_groups,
+                layout=layout(max_len)),
+            decode_step=lambda p, t, c, dp_groups=1, **kw: moe.decode_step(
+                p, t, c, cfg, dp_groups, attn_backend=attn, **kw),
         )
     if fam == "ssm":
         return ModelApi(
@@ -95,9 +103,10 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
             init=lambda key: hybrid.init(key, cfg),
             loss_fn=lambda p, b: hybrid.loss_fn(p, b, cfg),
             forward=lambda p, b: hybrid.forward(p, b["tokens"], cfg),
-            prefill=lambda p, b, max_len: hybrid.prefill(p, b["tokens"], cfg, max_len),
-            decode_step=lambda p, t, c: hybrid.decode_step(
-                p, t, c, cfg, attn_backend=attn),
+            prefill=lambda p, b, max_len: hybrid.prefill(
+                p, b["tokens"], cfg, max_len, layout=layout(max_len)),
+            decode_step=lambda p, t, c, **kw: hybrid.decode_step(
+                p, t, c, cfg, attn_backend=attn, **kw),
         )
     if fam == "encdec":
         return ModelApi(
@@ -105,9 +114,10 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
             init=lambda key: encdec.init(key, cfg),
             loss_fn=lambda p, b: encdec.loss_fn(p, b, cfg),
             forward=lambda p, b: encdec.forward(p, b, cfg),
-            prefill=lambda p, b, max_len: encdec.prefill(p, b, cfg, max_len),
-            decode_step=lambda p, t, c: encdec.decode_step(
-                p, t, c, cfg, attn_backend=attn),
+            prefill=lambda p, b, max_len: encdec.prefill(
+                p, b, cfg, max_len, layout=layout(max_len)),
+            decode_step=lambda p, t, c, **kw: encdec.decode_step(
+                p, t, c, cfg, attn_backend=attn, **kw),
         )
     raise ValueError(fam)
 
@@ -182,7 +192,13 @@ def input_specs(
 def cache_specs(
     cfg: ModelConfig, shape: ShapeConfig, abstract: bool = True,
 ) -> PyTree:
-    """KV/SSM cache stand-ins of capacity ``shape.seq_len`` for decode cells."""
+    """KV/SSM cache stand-ins of capacity ``shape.seq_len`` for decode cells.
+
+    Attention KV arrays use the kernel-native ``[..., B, KV, S, D]`` layout
+    (``models.kvcache`` / ``repro.core.backends.KVCacheLayout``); the
+    capacity here is exactly ``seq_len`` — the identity layout, since the
+    dry-run decodes through the ``dense-ref`` oracle.
+    """
     B, S = shape.global_batch, shape.seq_len
     kv_dt = jnp.bfloat16
 
@@ -191,29 +207,29 @@ def cache_specs(
             return jax.ShapeDtypeStruct(shp, dtype)
         return jnp.zeros(shp, dtype)
 
-    def scalar_len():
+    def scalar_len(fill=None):
         if abstract:
             return jax.ShapeDtypeStruct((), jnp.int32)
-        return jnp.asarray(S - 1, jnp.int32)
+        return jnp.asarray(S - 1 if fill is None else fill, jnp.int32)
 
     if cfg.family in ("dense", "vlm"):
         Lr = cfg.n_layers
         return {
-            "k": arr((Lr, B, S, cfg.eff_kv_heads, cfg.d_head), kv_dt),
-            "v": arr((Lr, B, S, cfg.eff_kv_heads, cfg.d_head), kv_dt),
+            "k": arr((Lr, B, cfg.eff_kv_heads, S, cfg.d_head), kv_dt),
+            "v": arr((Lr, B, cfg.eff_kv_heads, S, cfg.d_head), kv_dt),
             "length": scalar_len(),
         }
     if cfg.family == "moe":
         stacks = []
         if cfg.first_dense_layers:
             stacks.append({
-                "k": arr((cfg.first_dense_layers, B, S, cfg.eff_kv_heads, cfg.d_head), kv_dt),
-                "v": arr((cfg.first_dense_layers, B, S, cfg.eff_kv_heads, cfg.d_head), kv_dt),
+                "k": arr((cfg.first_dense_layers, B, cfg.eff_kv_heads, S, cfg.d_head), kv_dt),
+                "v": arr((cfg.first_dense_layers, B, cfg.eff_kv_heads, S, cfg.d_head), kv_dt),
             })
         n_moe = cfg.n_layers - cfg.first_dense_layers
         stacks.append({
-            "k": arr((n_moe, B, S, cfg.eff_kv_heads, cfg.d_head), kv_dt),
-            "v": arr((n_moe, B, S, cfg.eff_kv_heads, cfg.d_head), kv_dt),
+            "k": arr((n_moe, B, cfg.eff_kv_heads, S, cfg.d_head), kv_dt),
+            "v": arr((n_moe, B, cfg.eff_kv_heads, S, cfg.d_head), kv_dt),
         })
         return {"stacks": stacks, "length": scalar_len()}
     if cfg.family == "ssm":
@@ -245,8 +261,8 @@ def cache_specs(
             }
 
         kv = (
-            arr((n_full, B, S, cfg.eff_kv_heads, cfg.d_head), kv_dt),
-            arr((n_full, B, S, cfg.eff_kv_heads, cfg.d_head), kv_dt),
+            arr((n_full, B, cfg.eff_kv_heads, S, cfg.d_head), kv_dt),
+            arr((n_full, B, cfg.eff_kv_heads, S, cfg.d_head), kv_dt),
         )
         states = (
             conv_dict((n_full, g)),
@@ -256,8 +272,8 @@ def cache_specs(
         cache = {"kv": kv, "states": states, "length": scalar_len()}
         if tail:
             cache["tail_kv"] = (
-                arr((B, S, cfg.eff_kv_heads, cfg.d_head), kv_dt),
-                arr((B, S, cfg.eff_kv_heads, cfg.d_head), kv_dt),
+                arr((B, cfg.eff_kv_heads, S, cfg.d_head), kv_dt),
+                arr((B, cfg.eff_kv_heads, S, cfg.d_head), kv_dt),
             )
             cache["tail_state"] = (
                 conv_dict((tail,)),
@@ -272,10 +288,11 @@ def cache_specs(
         Lr = cfg.n_layers
         Ssrc = cfg.frontend_tokens
         return {
-            "k": arr((Lr, B, S, cfg.eff_kv_heads, cfg.d_head), kv_dt),
-            "v": arr((Lr, B, S, cfg.eff_kv_heads, cfg.d_head), kv_dt),
-            "kc": arr((Lr, B, Ssrc, cfg.eff_kv_heads, cfg.d_head), kv_dt),
-            "vc": arr((Lr, B, Ssrc, cfg.eff_kv_heads, cfg.d_head), kv_dt),
+            "k": arr((Lr, B, cfg.eff_kv_heads, S, cfg.d_head), kv_dt),
+            "v": arr((Lr, B, cfg.eff_kv_heads, S, cfg.d_head), kv_dt),
+            "kc": arr((Lr, B, cfg.eff_kv_heads, Ssrc, cfg.d_head), kv_dt),
+            "vc": arr((Lr, B, cfg.eff_kv_heads, Ssrc, cfg.d_head), kv_dt),
             "length": scalar_len(),
+            "src_length": scalar_len(fill=Ssrc),
         }
     raise ValueError(cfg.family)

@@ -20,13 +20,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.backends import get_backend
+from repro.core.backends import KVCacheLayout, get_backend
 from repro.models import layers as L
 from repro.models.attention import (
     chunked_causal_attention,
-    combine_split_kv,
-    decode_attention,
+    sharded_decode_attend,
 )
+from repro.models.kvcache import pad_kv_to_layout
 
 PyTree = Any
 
@@ -133,14 +133,15 @@ def loss_fn(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig) -> 
 def prefill(
     params: PyTree, tokens: jnp.ndarray, cfg: ModelConfig, max_len: int,
     extra_embeds: Optional[jnp.ndarray] = None,
+    layout: KVCacheLayout = KVCacheLayout(),
 ) -> Tuple[jnp.ndarray, PyTree]:
-    """Run the prompt, build the KV cache padded to ``max_len``."""
+    """Run the prompt, build the kernel-native [B, KV, S, D] KV cache with
+    capacity ``layout.padded_len(max_len)`` (see ``models.kvcache``)."""
     x = L.embed_tokens(params["embed"], tokens)
     if extra_embeds is not None:
         x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
     B, S, _ = x.shape
     positions = jnp.arange(S)[None, :].repeat(B, axis=0)
-    pad = max_len - S
 
     def body(h, block):
         hn = L.rms_norm(h, block["ln_attn"], cfg.norm_eps)
@@ -150,8 +151,8 @@ def prefill(
         o = chunked_causal_attention(q, k, v)
         h = h + L.out_project(block["attn"], o, h.dtype)
         h = _mlp_apply(block, h, cfg)
-        k_pad = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v_pad = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pad = pad_kv_to_layout(k, max_len, layout)
+        v_pad = pad_kv_to_layout(v, max_len, layout)
         return h, (k_pad, v_pad)
 
     if cfg.remat:
@@ -164,21 +165,52 @@ def prefill(
     return logits, cache
 
 
+def _decode_attn(attn, q, k, v, k_cache, v_cache, pos, seq_shard_axes):
+    """Shared per-layer decode-attention step over the kernel-native cache.
+
+    Inserts the new token's KV and dispatches the backend.  Replicated
+    caches (``seq_shard_axes=None``) write at the global position and decode
+    locally.  Sequence-sharded caches (inside a shard_map binding the named
+    axes over the cache's S dim) write on the shard owning ``pos``, run the
+    backend's split-KV form over the local slice with the shard-local valid
+    prefix, and lse-combine partials across shards — so ``pallas-splitk``
+    (and every other backend) serves sharded fleets, not just single-device
+    decode.  Returns (o [B,1,H,D], k_cache, v_cache).
+    """
+    B, _, KV, D = k.shape
+    kt = k.astype(k_cache.dtype).reshape(B, KV, 1, D)
+    vt = v.astype(v_cache.dtype).reshape(B, KV, 1, D)
+    if seq_shard_axes is None:
+        k_cache = jax.lax.dynamic_update_slice(k_cache, kt, (0, 0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, vt, (0, 0, pos, 0))
+        o = attn.decode(q, k_cache, v_cache, cache_len=pos + 1)
+        return o, k_cache, v_cache
+    return sharded_decode_attend(attn, q, kt, vt, k_cache, v_cache, pos,
+                                 seq_shard_axes)
+
+
 def decode_step(
     params: PyTree, token: jnp.ndarray, cache: PyTree, cfg: ModelConfig,
     *, seq_shard_axes=None, attn_backend=None,
+    layout: Optional[KVCacheLayout] = None,
 ) -> Tuple[jnp.ndarray, PyTree]:
     """One decode step.  token [B, 1] → logits [B, 1, V].
 
     ``seq_shard_axes``: mesh axis name(s) the KV cache's sequence dim is
-    sharded over — partial attention outputs are lse-combined across them
-    (split-KV decode).  None means the cache is sequence-replicated locally.
+    sharded over — the new token's KV is inserted on the owning shard and
+    partial attention outputs are lse-combined across the axes (split-KV
+    decode).  None means the cache is sequence-replicated locally.
 
     ``attn_backend``: :class:`repro.core.backends.AttentionBackend` name or
-    instance for the local (sequence-replicated) attention dispatch; ``None``
-    resolves to ``dense-ref``, the oracle.
+    instance; ``None`` resolves to ``dense-ref``, the oracle.
+
+    ``layout``: the :class:`KVCacheLayout` the cache was allocated with —
+    when given, the (local) cache capacity is checked against its padding
+    rule at trace time.
     """
     attn = get_backend("attention", attn_backend)
+    if layout is not None:
+        layout.check_capacity(int(cache["k"].shape[3]))
     x = L.embed_tokens(params["embed"], token)
     B = x.shape[0]
     pos = cache["length"]
@@ -191,18 +223,8 @@ def decode_step(
         q, k, v = L.qkv_project(block["attn"], hn)
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
-        if seq_shard_axes is None:
-            k_cache = jax.lax.dynamic_update_slice(
-                k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
-            v_cache = jax.lax.dynamic_update_slice(
-                v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
-            o = attn.decode(q, k_cache, v_cache, cache_len=pos + 1)
-        else:
-            # sequence-sharded cache: the new token's KV lands on the shard
-            # owning position `pos`; handled by the distributed wrapper.
-            o, lse = decode_attention(q, k_cache, v_cache, cache_len=None,
-                                      return_lse=True)
-            o = combine_split_kv(o, lse, seq_shard_axes).astype(h.dtype)
+        o, k_cache, v_cache = _decode_attn(
+            attn, q, k, v, k_cache, v_cache, pos, seq_shard_axes)
         h = h + L.out_project(block["attn"], o.astype(h.dtype), h.dtype)
         h = _mlp_apply(block, h, cfg)
         return h, (k_cache, v_cache)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.backends import get_backend
+from repro.core.backends import KVCacheLayout, cache_layout_for, get_backend
 from repro.models.registry import get_model
 
 PyTree = Any
@@ -38,20 +38,28 @@ class ServingEngine:
                  seed: int = 0, attn_backend=None, max_len_hint: int = 0):
         """``attn_backend``: decode-attention backend name/instance routed to
         every model family's decode step (``repro.core.backends``).  ``None``
-        keeps the ``dense-ref`` oracle; ``"auto"`` asks the router to pick
-        from the platform and ``max_len_hint`` (expected cache capacity)."""
+        keeps the ``dense-ref`` oracle; ``"auto"`` asks the router for a
+        :class:`repro.serving.router.DecodePlan` — backend plus the
+        :class:`KVCacheLayout` its kernel-native caches need — from the
+        platform and ``max_len_hint`` (expected cache capacity)."""
         self.cfg = cfg
         if attn_backend == "auto":
-            from repro.serving.router import route_attention_backend
+            from repro.serving.router import route_decode_plan
 
-            attn_backend = route_attention_backend(
-                cfg, max_len=max_len_hint or None)
+            attn_backend = route_decode_plan(
+                cfg, max_len=max_len_hint or None).attn_backend
         self.attn_backend = get_backend("attention", attn_backend)
         self.model = get_model(cfg, attn_backend=self.attn_backend)
         self.params = params if params is not None else self.model.init(
             jax.random.key(seed))
         self._prefill = jax.jit(self.model.prefill, static_argnums=(2,))
         self._decode = jax.jit(self.model.decode_step)
+
+    def cache_layout(self, max_len: int) -> KVCacheLayout:
+        """The layout the engine's caches use for a given capacity: prefill
+        (via the ``get_model`` closure) allocates
+        ``[B, KV, padded_len(max_len), D]`` buffers with it."""
+        return cache_layout_for(self.attn_backend, max_len)
 
     def generate(
         self,

@@ -17,6 +17,7 @@ import dataclasses
 from typing import Literal, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.backends import KVCacheLayout, cache_layout_for, get_backend
 from repro.core.cost_model import TPU_V5E, recommend_configuration
 
 Channel = Literal["serial", "queue", "object"]
@@ -26,6 +27,18 @@ Channel = Literal["serial", "queue", "object"]
 class ServerlessRoute:
     channel: Channel
     workers: int
+
+
+@dataclasses.dataclass
+class DecodePlan:
+    """A routed decode configuration: which attention backend runs the
+    per-step hot path, and the :class:`KVCacheLayout` its caches must be
+    allocated with (kernel-native [B, KV, S, D], capacity padded to the
+    backend's block_k) — resolved once per serving configuration and
+    threaded ``ServingEngine`` → ``get_model`` → family prefill/decode."""
+
+    attn_backend: str
+    cache_layout: KVCacheLayout
 
 
 @dataclasses.dataclass
@@ -69,6 +82,22 @@ def route_attention_backend(cfg: ModelConfig, max_len: Optional[int] = None,
     if max_len is not None and max_len > 4096:
         return "chunked-lse"
     return "dense-ref"
+
+
+def route_decode_plan(cfg: ModelConfig, max_len: Optional[int] = None,
+                      platform: Optional[str] = None) -> DecodePlan:
+    """Backend choice + the cache layout it implies, in one decision.
+
+    ``pallas-splitk`` pins ``block_k`` from its autotune table for the
+    expected capacity (so prefill pads the cache once and decode never
+    re-lays it out); the view-based backends get the identity layout.
+    """
+    name = route_attention_backend(cfg, max_len=max_len, platform=platform)
+    backend = get_backend("attention", name)
+    return DecodePlan(
+        attn_backend=name,
+        cache_layout=cache_layout_for(backend, max_len or 1),
+    )
 
 
 def route_tpu(cfg: ModelConfig, shape: ShapeConfig,

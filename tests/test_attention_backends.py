@@ -4,7 +4,11 @@ Sweeps every registered :class:`AttentionBackend` against the ``dense-ref``
 oracle at two levels:
 
 * **op level** — raw ``decode(q, k_cache, v_cache, cache_len)`` over dtype ×
-  ragged ``cache_len`` edge cases (1, block_k−1, block_k, block_k+1, S);
+  ragged ``cache_len`` edge cases (1, block_k−1, block_k, block_k+1, S), on
+  the canonical kernel-native ``[B, KV, S, D]`` cache layout (PR 4: the
+  capacity is padded to a ``block_k`` multiple at prefill, so ``S`` here is
+  pre-padded and ``pallas-splitk`` *rejects* non-multiple capacities instead
+  of silently re-padding per step);
 * **model level** — every decoding family's full ``decode_step`` (dense
   transformer, MoE, hybrid shared-attention, enc-dec self+cross) with the
   cache ``length`` forced to the same edge set, asserting logits parity
@@ -78,15 +82,15 @@ class TestOpParity:
     @pytest.mark.parametrize("backend", ATTENTION_BACKEND_NAMES)
     def test_matches_dense_ref_across_cache_lens(self, backend, dtype):
         rng = np.random.default_rng(0)
-        # S=20 is deliberately NOT a multiple of BLOCK_K=8 so the
-        # pallas-splitk zero-pad branch is parity-checked, not just traced
-        B, H, KV, S, D = 2, 4, 2, 20, 16
+        # capacity pre-padded to a BLOCK_K multiple (the prefill layout
+        # contract); raggedness lives in cache_len, swept below
+        B, H, KV, S, D = 2, 4, 2, 24, 16
         q = jnp.asarray(rng.standard_normal((B, 1, H, D)), dtype)
-        k = jnp.asarray(rng.standard_normal((B, S, KV, D)), dtype)
-        v = jnp.asarray(rng.standard_normal((B, S, KV, D)), dtype)
+        k = jnp.asarray(rng.standard_normal((B, KV, S, D)), dtype)
+        v = jnp.asarray(rng.standard_normal((B, KV, S, D)), dtype)
         ref_be = get_backend("attention", "dense-ref")
         be = _backend(backend)
-        for cache_len in (1, BLOCK_K - 1, BLOCK_K, BLOCK_K + 1, S):
+        for cache_len in (1, BLOCK_K - 1, BLOCK_K, BLOCK_K + 1, 20, S):
             want = ref_be.decode(q, k, v, cache_len)
             got = be.decode(q, k, v, cache_len)
             assert got.shape == (B, 1, H, D) and got.dtype == q.dtype
@@ -94,14 +98,26 @@ class TestOpParity:
                 np.asarray(got, np.float32), np.asarray(want, np.float32),
                 err_msg=f"{backend} cache_len={cache_len}", **TOL[dtype])
 
+    def test_splitk_rejects_unpadded_capacity(self):
+        """The per-step re-pad is gone by design: a capacity that violates
+        the backend's KVCacheLayout must fail loudly, not silently copy."""
+        rng = np.random.default_rng(0)
+        B, H, KV, S, D = 1, 2, 2, 20, 8          # 20 % BLOCK_K(8) != 0
+        q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, KV, S, D)), jnp.float32)
+        be = PallasSplitKAttention(block_k=BLOCK_K)
+        assert be.cache_layout(S).padded_len(S) == 24
+        with pytest.raises(ValueError, match="not a multiple of"):
+            be.decode(q, k, k, 5)
+
     @pytest.mark.parametrize("backend", ATTENTION_BACKEND_NAMES)
     def test_traced_cache_len_under_jit(self, backend):
         """cache_len must be a traced operand, not a static recompile key."""
         rng = np.random.default_rng(1)
         B, H, KV, S, D = 1, 4, 4, 16, 8
         q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
-        k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
-        v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, KV, S, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, KV, S, D)), jnp.float32)
         be = _backend(backend)
         f = jax.jit(lambda cl: be.decode(q, k, v, cl))
         ref_be = get_backend("attention", "dense-ref")
@@ -126,8 +142,8 @@ class TestOpParity:
         rng = np.random.default_rng(seed)
         B, H, KV, S, D = 2, 4, 2, 24, 8
         q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
-        k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
-        v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, KV, S, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, KV, S, D)), jnp.float32)
         got = decode_attention(q, k, v, cache_len=jnp.asarray(cache_len),
                                kv_chunk=kv_chunk)
         want = decode_attention_dense(q, k, v, cache_len=cache_len)
@@ -281,6 +297,36 @@ class TestRegistry:
         eng = ServingEngine(cfg, seed=0, attn_backend="auto")
         assert eng.attn_backend.name == route_attention_backend(cfg)
 
+    def test_route_decode_plan_bundles_layout(self):
+        """The router's DecodePlan carries the KVCacheLayout the backend's
+        caches must be allocated with (block_k padding for splitk, identity
+        for the view-based backends)."""
+        from repro.core.backends import SPLITK_BLOCK_K_TABLE
+        from repro.serving.router import route_decode_plan
+
+        cfg = get_config("internlm2-1.8b").reduced()
+        tpu = route_decode_plan(cfg, max_len=1000, platform="tpu")
+        assert tpu.attn_backend == "pallas-splitk"
+        assert tpu.cache_layout.block_k == 128          # table: ≤1024 → 128
+        assert tpu.cache_layout.padded_len(1000) == 1024
+        cpu = route_decode_plan(cfg, max_len=512, platform="cpu")
+        assert cpu.attn_backend == "dense-ref"
+        assert cpu.cache_layout.block_k == 1
+        assert cpu.cache_layout.padded_len(512) == 512
+        assert SPLITK_BLOCK_K_TABLE[0][1] == 64  # table shape sanity
+
+    def test_engine_cache_layout_follows_backend(self):
+        from repro.core.backends import KVCacheLayout
+        from repro.serving.engine import ServingEngine
+
+        cfg = get_config("internlm2-1.8b").reduced()
+        eng = ServingEngine(cfg, seed=0,
+                            attn_backend=PallasSplitKAttention(block_k=BLOCK_K))
+        assert eng.cache_layout(20) == KVCacheLayout(block_k=BLOCK_K)
+        assert eng.cache_layout(20).padded_len(20) == 24
+        ref = ServingEngine(cfg, seed=0)
+        assert ref.cache_layout(20).padded_len(20) == 20
+
 
 # ---------------------------------------------------------------------------
 # decode_mha jit-cache regressions (interpret default + no retrace)
@@ -313,15 +359,15 @@ class TestDecodeMhaJitCache:
         assert decode_mha_cache_size() == size_after_first
 
     def test_backend_decode_no_retrace(self):
-        """Same property through the pallas-splitk backend (padded cache)."""
+        """Same property through the pallas-splitk backend (native cache)."""
         from repro.kernels.decode_attention.ops import decode_mha_cache_size
 
         rng = np.random.default_rng(1)
         be = PallasSplitKAttention(block_k=BLOCK_K)
-        B, H, KV, S, D = 1, 2, 2, 20, 8   # S=20 pads to 24
+        B, H, KV, S, D = 1, 2, 2, 24, 8   # capacity = layout.padded_len(20)
         q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
-        k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
-        v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, KV, S, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, KV, S, D)), jnp.float32)
         be.decode(q, k, v, 1)
         size_after_first = decode_mha_cache_size()
         for cache_len in range(2, 8):

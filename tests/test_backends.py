@@ -8,9 +8,16 @@ FLOP accounting must be identical across backends, not just the outputs.
 
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core.backends import BACKEND_NAMES, get_backend
-from repro.core.sparse import CSRMatrix, bsr_from_dense, csr_from_dense, random_sparse
+from repro.core.sparse import (
+    CSRMatrix,
+    bsr_from_csr,
+    bsr_from_dense,
+    csr_from_dense,
+    random_sparse,
+)
 from repro.data.graphchallenge import (
     dense_inference,
     make_inputs,
@@ -146,6 +153,58 @@ class TestVectorizedContainers:
             got = csr.matmul_dense_fast(x, tile_elems=tile_elems)
             np.testing.assert_allclose(got, oracle, rtol=1e-6, atol=1e-6,
                                        err_msg=f"tile_elems={tile_elems}")
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        nrows=st.integers(min_value=0, max_value=70),
+        ncols=st.integers(min_value=1, max_value=70),
+        density_pct=st.integers(min_value=0, max_value=30),
+        block=st.sampled_from([(4, 4), (8, 16), (3, 5), (32, 32)]),
+        pad=st.booleans(),
+        seed=st.integers(min_value=0, max_value=9999),
+    )
+    def test_property_bsr_from_csr_roundtrip(self, nrows, ncols, density_pct,
+                                             block, pad, seed):
+        """CSR→BSR→dense ≡ the (zero-padded) dense oracle, and the
+        coordinate-built structure is identical to the densify path —
+        without ever materializing the dense matrix (the N=65536 fleet-prep
+        bottleneck).  Hypothesis sweeps empty matrices, empty rows, and
+        shapes from sub-single-block up to many blocks."""
+        rng = np.random.default_rng(seed)
+        dense = rng.standard_normal((nrows, ncols)).astype(np.float32)
+        dense[rng.random((nrows, ncols)) >= density_pct / 100.0] = 0.0
+        dense[::3] = 0.0                       # guaranteed empty rows
+        csr = csr_from_dense(dense)
+        bm, bn = block
+        if not pad and (nrows % bm or ncols % bn):
+            with pytest.raises(ValueError, match="not divisible"):
+                bsr_from_csr(csr, block, pad=False)
+            return
+        bsr = bsr_from_csr(csr, block, pad=pad)
+        mp = -(-max(nrows, 1) // bm) * bm if pad else nrows
+        np_ = -(-max(ncols, 1) // bn) * bn if pad else ncols
+        oracle = np.zeros((mp, np_), np.float32)
+        oracle[:nrows, :ncols] = dense
+        np.testing.assert_array_equal(bsr.to_dense(), oracle)
+        # structure parity vs the old to_dense round-trip
+        ref = bsr_from_dense(oracle, block)
+        np.testing.assert_array_equal(bsr.indptr, ref.indptr)
+        np.testing.assert_array_equal(bsr.indices, ref.indices)
+        np.testing.assert_array_equal(bsr.blocks, ref.blocks)
+
+    def test_bsr_from_csr_single_block_and_empty_edges(self):
+        # single dense block, exactly one block wide/tall
+        dense = np.arange(16, dtype=np.float32).reshape(4, 4)
+        bsr = bsr_from_csr(csr_from_dense(dense), (4, 4))
+        assert bsr.n_blocks == 1 and bsr.indices.tolist() == [0]
+        np.testing.assert_array_equal(bsr.to_dense(), dense)
+        # fully empty matrix (0 rows) pads to one all-zero block grid
+        empty = CSRMatrix(shape=(0, 5), indptr=np.zeros(1, np.int64),
+                          indices=np.zeros(0, np.int32),
+                          data=np.zeros(0, np.float32))
+        b = bsr_from_csr(empty, (4, 4), pad=True)
+        assert b.shape == (4, 8) and b.n_blocks == 0
+        np.testing.assert_array_equal(b.to_dense(), np.zeros((4, 8)))
 
     def test_padded_matches_naive(self):
         rng = np.random.default_rng(1)

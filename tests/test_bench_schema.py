@@ -36,6 +36,16 @@ class TestCommittedArtifact:
             assert row is not None, f"no decode_attn row for {name}"
             assert isinstance(row["us_per_call"], (int, float))
 
+    def test_decode_sharded_rows_present(self):
+        """PR 4: at least the 1-shard sequence-sharded decode row, numeric
+        (wider shard counts appear when the bench host has more devices)."""
+        rows = {r["name"]: r for r in _payload()["rows"]}
+        sharded = [r for n, r in rows.items()
+                   if n.startswith("decode_sharded_")]
+        assert sharded, "no decode_sharded_* rows in BENCH_fsi.json"
+        for row in sharded:
+            assert isinstance(row["us_per_call"], (int, float)), row
+
 
 class TestValidator:
     BASE = {"meta": {"quick": True}, "rows": [
@@ -65,6 +75,11 @@ class TestValidator:
     def test_rejects_timed_family_without_timing(self):
         bad = json.loads(json.dumps(self.BASE))
         bad["rows"][1] = {"name": "decode_attn_dense_ref", "gflops": 1.0}
+        assert any("timed family" in p for p in validate(bad))
+
+    def test_rejects_untimed_decode_sharded_row(self):
+        bad = json.loads(json.dumps(self.BASE))
+        bad["rows"].append({"name": "decode_sharded_splitk_d4", "shards": 4})
         assert any("timed family" in p for p in validate(bad))
 
     def test_allows_empty_timing_with_note(self):

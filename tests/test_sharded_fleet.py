@@ -108,6 +108,7 @@ class TestShardedFleetBackend:
         np.testing.assert_allclose(r.output, oracle, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.mesh
 @pytest.mark.slow
 def test_multi_device_mesh_parity():
     """Forced 4-device host platform: meshes of 1, 2, 4 devices, P=6 workers

@@ -122,8 +122,8 @@ class TestBatchCacheSpecs:
         shape = SHAPES["decode_32k"]
         cache = cache_specs(cfg, shape, abstract=True)
         specs = cache_pspecs(cfg, shape, cache, _ax(_mesh()))
-        # [L, B, S, KV, dh]: batch→data, seq→model
-        assert specs["k"] == P(None, ("data",), ("model",), None, None)
+        # kernel-native [L, B, KV, S, dh]: batch→data, seq→model
+        assert specs["k"] == P(None, ("data",), None, ("model",), None)
 
     def test_long500k_batch1_seq_over_everything(self):
         cfg = get_config("zamba2-7b")
@@ -131,8 +131,8 @@ class TestBatchCacheSpecs:
         cache = cache_specs(cfg, shape, abstract=True)
         specs = cache_pspecs(cfg, shape, cache, _ax(_mesh()))
         kv_spec = specs["kv"][0]
-        # batch=1 unshardable → sequence takes (data, model)
-        assert kv_spec[-3] == ("data", "model")
+        # batch=1 unshardable → sequence (now at -2) takes (data, model)
+        assert kv_spec[-2] == ("data", "model")
 
     def test_ssm_state_heads_over_model(self):
         cfg = get_config("mamba2-370m")
