@@ -14,7 +14,20 @@
 #                     CI's host-mesh-4 matrix entry runs this explicitly
 #   make bench-quick  CI-sized benchmark sweep + BENCH_fsi.json perf snapshot
 #                     (spmm_roofline_* + decode_attn_* rows per backend)
-#   make bench        full benchmark sweep
+#   make bench        full benchmark sweep.  PAPER_SCALE=1 adds the P=64,
+#                     N=65536 GraphChallenge sharded sweep (vmap baseline +
+#                     fused megakernel rows with a wall-clock budget)
+#   make bench-paper  the paper-scale sweep on CI-sized surroundings
+#                     (= bench-quick + --paper-scale)
+#   make bench-delta  fresh quick sweep into BENCH_fsi.new.json, schema-check
+#                     it, then fail on >20% billed-time regression vs the
+#                     committed BENCH_fsi.json (benchmarks/bench_delta.py) —
+#                     CI runs this so a harness slowdown fails the push.
+#                     NOTE: BENCH_fsi.json is a COMMITTED baseline since
+#                     PR 5; bench-quick/bench/bench-paper intentionally
+#                     refresh it in place — commit the refreshed file (use
+#                     bench-paper so the paper-scale rows stay recorded) or
+#                     `git checkout` it
 #   make schema-check validate BENCH_fsi.json rows (name/us_per_call) so the
 #                     perf-trajectory tooling never breaks on a malformed row
 #   make docs-check   verify README/ARCHITECTURE/kernels-README relative
@@ -29,9 +42,12 @@
 
 PY ?= python
 PYTEST_ARGS ?=
+PAPER_SCALE ?=
+BENCH_FLAGS := $(if $(PAPER_SCALE),--paper-scale,)
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-mesh bench-quick bench schema-check docs-check lint
+.PHONY: test test-mesh bench-quick bench bench-paper bench-delta \
+        schema-check docs-check lint
 
 test:
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
@@ -40,12 +56,21 @@ test-mesh:
 	$(PY) -m pytest -x -q -m mesh $(PYTEST_ARGS)
 
 bench-quick:
-	$(PY) -m benchmarks.run --quick --json BENCH_fsi.json
+	$(PY) -m benchmarks.run --quick $(BENCH_FLAGS) --json BENCH_fsi.json
 	$(PY) -m benchmarks.check_schema BENCH_fsi.json
 
 bench:
-	$(PY) -m benchmarks.run --json BENCH_fsi.json
+	$(PY) -m benchmarks.run $(BENCH_FLAGS) --json BENCH_fsi.json
 	$(PY) -m benchmarks.check_schema BENCH_fsi.json
+
+bench-paper:
+	$(PY) -m benchmarks.run --quick --paper-scale --json BENCH_fsi.json
+	$(PY) -m benchmarks.check_schema BENCH_fsi.json
+
+bench-delta:
+	$(PY) -m benchmarks.run --quick --json BENCH_fsi.new.json
+	$(PY) -m benchmarks.check_schema BENCH_fsi.new.json
+	$(PY) -m benchmarks.bench_delta BENCH_fsi.json BENCH_fsi.new.json
 
 schema-check:
 	$(PY) -m benchmarks.check_schema BENCH_fsi.json

@@ -1,0 +1,113 @@
+"""Perf-regression gate: diff a fresh ``BENCH_fsi.json`` against the
+committed baseline and fail on >20% regression in the timing column of
+named rows.
+
+Only rows whose timing is **simulator-billed** (``per_sample_ms`` — derived
+from the deterministic worker-clock model, identical on any host) are gated
+by default, so the check is meaningful across CI machines.  Wall-clock
+fields (``wall_s``, ``us_per_call`` host microbenches) are machine-dependent
+and excluded unless rows are named explicitly via ``--rows``.
+
+A named row missing from the *baseline* is skipped (new row, no trend yet);
+missing from the *fresh* file it fails — a silently dropped benchmark is a
+broken trajectory.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_delta BASELINE.json FRESH.json \
+        [--threshold 0.2] [--rows name1,name2,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Sequence
+
+# Billed-time rows tracked across PRs: deterministic given the latency/cost
+# model, so a >20% move is an algorithmic change, not machine noise.
+DEFAULT_ROWS = (
+    "fsi_serial",
+    "fsi_queue_P2",
+    "fsi_queue_P4",
+    "fsi_queue_P8",
+    "fsi_object_P2",
+    "fsi_object_P4",
+    "fsi_object_P8",
+    "fsi_sharded_P64_N1024",
+    "fsi_sharded_fused_P64_N1024",
+)
+
+TIMING_FIELDS = ("per_sample_ms", "us_per_call")
+
+
+def _timing(row: dict):
+    for f in TIMING_FIELDS:
+        v = row.get(f)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            return f, float(v)
+    return None, None
+
+
+def compare(baseline: dict, fresh: dict, rows: Sequence[str] = DEFAULT_ROWS,
+            threshold: float = 0.2) -> List[str]:
+    """Returns human-readable problems (empty == within budget)."""
+    base_rows: Dict[str, dict] = {r.get("name"): r
+                                  for r in baseline.get("rows", [])}
+    new_rows: Dict[str, dict] = {r.get("name"): r
+                                 for r in fresh.get("rows", [])}
+    problems: List[str] = []
+    for name in rows:
+        base = base_rows.get(name)
+        if base is None:
+            continue  # no trend yet — nothing to regress against
+        new = new_rows.get(name)
+        if new is None:
+            problems.append(f"{name}: present in baseline but missing from "
+                            f"fresh rows (dropped benchmark?)")
+            continue
+        bf, bv = _timing(base)
+        nf, nv = _timing(new)
+        if bv is None or nv is None:
+            continue  # e.g. "" + note rows (dependency unavailable)
+        if bv > 0 and nv > bv * (1.0 + threshold):
+            problems.append(
+                f"{name}: {nf} regressed {nv:.4g} vs baseline {bv:.4g} "
+                f"(+{(nv / bv - 1) * 100:.1f}% > {threshold * 100:.0f}%)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_fsi.json")
+    ap.add_argument("fresh", help="freshly produced BENCH_fsi.json")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="max allowed relative regression (default 0.2)")
+    ap.add_argument("--rows", default=None,
+                    help="comma-separated row names (default: the billed-"
+                         "time trajectory rows)")
+    args = ap.parse_args(argv)
+    payloads = []
+    for path in (args.baseline, args.fresh):
+        try:
+            with open(path) as f:
+                payloads.append(json.load(f))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable ({e})", file=sys.stderr)
+            return 2
+    rows = tuple(args.rows.split(",")) if args.rows else DEFAULT_ROWS
+    problems = compare(payloads[0], payloads[1], rows=rows,
+                       threshold=args.threshold)
+    for p in problems:
+        print(f"bench-delta: {p}", file=sys.stderr)
+    if not problems:
+        checked = sum(1 for n in rows
+                      if n in {r.get('name') for r in payloads[0]['rows']})
+        print(f"bench-delta: {checked} rows within "
+              f"{args.threshold * 100:.0f}% of baseline")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,15 +14,20 @@ Also benchmarks the worker compute backends (PR 1):
 * ``fsi_backend_*`` rows run the full queue pipeline per backend and report
   host wall-clock (billed µs/query is backend-invariant by design).
 
-And the mesh-sharded paper-scale fleet path (PR 3):
+And the mesh-sharded paper-scale fleet path (PR 3, fused rows PR 5):
 
 * ``fsi_sharded_*`` rows sweep P≥64 fleets through the
-  ``pallas-bsr-sharded`` backend — the fleet panel laid over a ``worker``
-  device mesh via shard_map — at paper-scale neuron counts (quick: N=1024;
-  full adds N=16384; the N=65536 GraphChallenge size runs through the same
-  path and no longer densifies its shards offline — ``bsr_from_csr`` builds
-  BSR straight from CSR block coordinates since PR 4 — pass
-  ``cases=((64, 65536, 1, 4),)`` explicitly).
+  ``pallas-bsr-sharded`` backend with the PR 3 semantics — vmap-within-shard
+  dispatch + the per-worker channel hot path — at paper-scale neuron counts
+  (quick: N=1024; full adds N=16384).
+* ``fsi_sharded_fused_*`` rows run the same cases through the per-device
+  fleet megakernel + batched channel defaults, recording
+  ``speedup_vs_vmap`` and bitwise ``ulp_exact`` parity against the vmap
+  row.  ``paper_scale=True`` (``make bench PAPER_SCALE=1`` /
+  ``make bench-paper``) adds the full N=65536 GraphChallenge size — both
+  rows, with a wall-clock ``budget_s`` recorded — which no longer
+  densifies shards offline (``bsr_from_csr`` builds BSR straight from CSR
+  block coordinates since PR 4).
 
 And the sequence-sharded decode path (PR 4):
 
@@ -99,42 +104,99 @@ def bench_backends(net, x0, oracle, P: int = 8,
 
 def bench_sharded_fleet(
     cases: Sequence[tuple] = ((64, 1024, 4, 16),),
+    paper_scale: bool = False,
+    paper_budget_s: float = 60.0,
 ) -> List[dict]:
     """Paper-scale fleet sweep (P≥64, §VI neuron counts) through the
     mesh-sharded backend.  ``cases`` are (P, neurons, layers, batch) tuples;
     each runs the full queue pipeline with the fleet panel sharded over a
     ``worker`` mesh built from every visible device (1 on a plain CPU host;
     set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
-    init for a wider host mesh)."""
+    init for a wider host mesh).
+
+    Each case produces TWO rows sharing one a-priori partition (hypergraph
+    partitioning is offline per the paper, so it is excluded from both
+    walls):
+
+    * ``fsi_sharded_*`` — the PR 3 semantics: ``dispatch="vmap"`` within
+      each shard + the per-worker channel hot path;
+    * ``fsi_sharded_fused_*`` — the per-device fleet megakernel + the
+      batched channel hot path (the run_fsi defaults), with
+      ``speedup_vs_vmap`` and an ``ulp_exact`` bitwise-parity flag against
+      the vmap row's output.
+
+    ``paper_scale`` adds the full N=65536 GraphChallenge size — both rows,
+    so the fused row's ``speedup_vs_vmap`` is measured where the megakernel
+    matters most — with a wall-clock budget recorded in the fused row.
+    """
     rows: List[dict] = []
     try:
         get_backend("pallas-bsr-sharded")
     except ImportError:
-        return [dict(name=f"fsi_sharded_P{p}_N{n}", us_per_call="",
-                     note="jax not installed") for p, n, _, _ in cases]
+        pairs = list(cases) + ([(64, 65536, 1, 4)] if paper_scale else [])
+        names = [f"fsi_sharded_P{p}_N{n}" for p, n, _, _ in pairs]
+        names += [f"fsi_sharded_fused_P{p}_N{n}" for p, n, _, _ in pairs]
+        return [dict(name=n, us_per_call="", note="jax not installed")
+                for n in names]
     import jax
 
+    from repro.core.backends import PallasBsrShardedBackend
+    from repro.core.partitioner import partition_network
     from repro.launch.mesh import make_worker_mesh
 
     mesh = make_worker_mesh()
-    for P, N, L, batch in cases:
+
+    def one_case(P, N, L, batch, budget_s=None):
         net = make_sparse_dnn(N, n_layers=L, seed=0)
         x0 = make_inputs(N, batch, seed=1)
         oracle = dense_inference(net, x0)
+        partition = partition_network(net.layers, P, method="hgp", seed=0)
+        out: List[dict] = []
+        vmap_backend = PallasBsrShardedBackend(mesh=mesh, dispatch="vmap")
+        t0 = time.perf_counter()
+        r_vmap = run_fsi(net, x0, P=P, channel="queue", memory_mb=4000,
+                         compute_backend=vmap_backend, mesh=mesh,
+                         partition=partition, channel_batching=False)
+        wall_vmap = time.perf_counter() - t0
+        assert np.allclose(r_vmap.output, oracle, rtol=1e-4, atol=1e-4)
+        out.append(dict(
+            name=f"fsi_sharded_P{P}_N{N}", P=P, neurons=N, layers=L,
+            devices=len(jax.devices()),
+            per_sample_ms=r_vmap.per_sample_ms(batch),
+            cost_usd=r_vmap.cost.total,
+            comms_usd=r_vmap.cost.communication,
+            wire_mb=r_vmap.wire_exchange_bytes / 1e6,
+            wall_s=round(wall_vmap, 4),
+        ))
         t0 = time.perf_counter()
         r = run_fsi(net, x0, P=P, channel="queue", memory_mb=4000,
-                    compute_backend="pallas-bsr-sharded", mesh=mesh)
+                    compute_backend="pallas-bsr-sharded", mesh=mesh,
+                    partition=partition)
         wall = time.perf_counter() - t0
         assert np.allclose(r.output, oracle, rtol=1e-4, atol=1e-4)
-        rows.append(dict(
-            name=f"fsi_sharded_P{P}_N{N}", P=P, neurons=N, layers=L,
+        row = dict(
+            name=f"fsi_sharded_fused_P{P}_N{N}", P=P, neurons=N, layers=L,
             devices=len(jax.devices()),
             per_sample_ms=r.per_sample_ms(batch),
             cost_usd=r.cost.total,
             comms_usd=r.cost.communication,
             wire_mb=r.wire_exchange_bytes / 1e6,
             wall_s=round(wall, 4),
-        ))
+            speedup_vs_vmap=round(wall_vmap / wall, 2),
+            ulp_exact=bool(np.array_equal(r.output, r_vmap.output)),
+        )
+        if budget_s is not None:
+            row["budget_s"] = budget_s
+            row["within_budget"] = bool(wall <= budget_s)
+        out.append(row)
+        return out
+
+    for P, N, L, batch in cases:
+        rows.extend(one_case(P, N, L, batch))
+    if paper_scale:
+        # the headline gate: both dispatches at the full GraphChallenge
+        # N=65536 — the sweep the megakernel + batched channels un-block
+        rows.extend(one_case(64, 65536, 1, 4, budget_s=paper_budget_s))
     return rows
 
 
@@ -207,7 +269,8 @@ def bench_sharded_decode(batch: int = 4, heads: int = 8, kv_heads: int = 2,
 
 def run(neurons=512, layers=24, batch=64, workers=(2, 4, 8, 16),
         backends=("numpy-csr", "numpy-fast", "pallas-bsr"),
-        sharded_cases=((64, 1024, 4, 16), (64, 16384, 2, 8))) -> List[dict]:
+        sharded_cases=((64, 1024, 4, 16), (64, 16384, 2, 8)),
+        paper_scale=False, paper_budget_s=60.0) -> List[dict]:
     net = make_sparse_dnn(neurons, n_layers=layers, seed=0)
     x0 = make_inputs(neurons, batch, seed=1)
     oracle = dense_inference(net, x0)
@@ -235,6 +298,7 @@ def run(neurons=512, layers=24, batch=64, workers=(2, 4, 8, 16),
             ))
     rows.extend(bench_backends(net, x0, oracle, P=max(workers),
                                backends=backends))
-    rows.extend(bench_sharded_fleet(sharded_cases))
+    rows.extend(bench_sharded_fleet(sharded_cases, paper_scale=paper_scale,
+                                    paper_budget_s=paper_budget_s))
     rows.extend(bench_sharded_decode(seq=256 if neurons <= 256 else 1024))
     return rows

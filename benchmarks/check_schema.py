@@ -11,7 +11,10 @@ must fail CI instead of silently corrupting the trend.  Rules:
   unavailable" convention);
 * benchmark families with a timing contract (``spmm_roofline_*``,
   ``decode_attn_*``, ``decode_sharded_*``, ``fsi_*``) must carry a timing
-  field.
+  field;
+* ``fsi_sharded_fused_*`` rows (the megakernel + batched-channel sweep) must
+  carry a numeric ``wall_s``, and a row with a ``budget_s`` (the paper-scale
+  case) must carry numeric ``budget_s`` and boolean ``within_budget``.
 
 Usage::
 
@@ -65,6 +68,21 @@ def validate(payload) -> List[str]:
         if not timing and name.startswith(TIMED_PREFIXES):
             problems.append(f"{where} ({name}): timed family without "
                             f"any of {TIMING_FIELDS}")
+        if name.startswith("fsi_sharded_fused_") and not row.get("note"):
+            wall = row.get("wall_s")
+            if not isinstance(wall, (int, float)) or isinstance(wall, bool):
+                problems.append(
+                    f"{where} ({name}): fused sweep row without numeric "
+                    f"'wall_s'")
+        if "budget_s" in row:
+            budget = row["budget_s"]
+            if not isinstance(budget, (int, float)) or isinstance(budget, bool):
+                problems.append(
+                    f"{where} ({name}): non-numeric budget_s={budget!r}")
+            if not isinstance(row.get("within_budget"), bool):
+                problems.append(
+                    f"{where} ({name}): budget_s without boolean "
+                    f"'within_budget'")
     return problems
 
 

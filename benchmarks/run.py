@@ -36,6 +36,10 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller configs (CI-sized)")
+    ap.add_argument("--paper-scale", action="store_true",
+                    help="add the P=64, N=65536 GraphChallenge sharded sweep "
+                         "(vmap baseline + fused megakernel rows, with a "
+                         "wall-clock budget recorded in the row)")
     ap.add_argument("--json", nargs="?", const="BENCH_fsi.json", default=None,
                     metavar="PATH",
                     help="also write all rows to PATH (default BENCH_fsi.json)")
@@ -56,14 +60,15 @@ def main(argv=None) -> None:
     if args.quick:
         _emit(bench_fsi_channels.run(neurons=256, layers=12, batch=32,
                                      workers=(2, 4, 8),
-                                     sharded_cases=((64, 1024, 4, 16),)),
+                                     sharded_cases=((64, 1024, 4, 16),),
+                                     paper_scale=args.paper_scale),
               sink)
         _emit(bench_partitioning.run(neurons=512, layers=12, batch=16, P=8), sink)
         _emit(bench_cost_model.run(neurons=256, layers=12, batch=32, P=4), sink)
         _emit(bench_sporadic.run(neurons=256, layers=12, batch=32), sink)
         _emit(bench_roofline.run(neurons=256, batch=32), sink)
     else:
-        _emit(bench_fsi_channels.run(), sink)
+        _emit(bench_fsi_channels.run(paper_scale=args.paper_scale), sink)
         _emit(bench_partitioning.run(), sink)
         _emit(bench_cost_model.run(), sink)
         _emit(bench_sporadic.run(), sink)
@@ -74,6 +79,7 @@ def main(argv=None) -> None:
         payload = {
             "meta": {
                 "quick": args.quick,
+                "paper_scale": args.paper_scale,
                 "wall_s": round(wall, 2),
                 "python": platform.python_version(),
                 "machine": platform.machine(),

@@ -22,11 +22,14 @@ the numbers.  This module makes that choice pluggable:
 * ``pallas-bsr-sharded`` — the same fleet panel laid out over a real device
   mesh: the stacked worker axis is sharded over a 1-D ``worker`` mesh axis
   (``launch.mesh.make_worker_mesh``) and each layer dispatches through
-  ``distributed.sharding.shard_map_compat`` with per-shard Pallas BSR
-  bodies, so simulated workers map 1:1 (or blocked P/D) onto devices — the
-  paper's "one worker ≈ one isolated compute unit" execution model instead
-  of one fused vmap.  P not divisible by the device count is padded with
-  zero workers.
+  ``distributed.sharding.shard_map_compat``, so simulated workers map 1:1
+  (or blocked P/D) onto devices — the paper's "one worker ≈ one isolated
+  compute unit" execution model.  The default ``dispatch="fused"`` runs ONE
+  fleet-megakernel ``pallas_call`` per device (worker index folded into the
+  grid, per-panel block counts bounding the K loop);
+  ``dispatch="vmap"`` keeps the PR 3 vmap-within-shard body as the parity
+  baseline.  P not divisible by the device count is padded with zero
+  workers.
 
 Backends only change how the arithmetic is executed — FLOP charging, message
 accounting and memory high-water marks are computed by the caller from the
@@ -159,6 +162,7 @@ class _PallasLayerState:
 
     blocks: np.ndarray      # f32[NBR, K, bm, bn]
     cols: np.ndarray        # i32[NBR, K]
+    counts: np.ndarray      # i32[NBR] true blocks per row (BSR indptr diff)
     m: int                  # true output rows (unpadded)
     n: int                  # true input rows (unpadded)
     n_pad: int              # padded input height = NBC * bn
@@ -167,10 +171,13 @@ class _PallasLayerState:
 @dataclasses.dataclass
 class _PallasFleetState:
     """One layer's fleet panel: every worker's operands padded to common
-    [P, NBRmax, Kmax, bm, bn] so a single vmapped dispatch covers the fleet."""
+    [P, NBRmax, Kmax, bm, bn] so a single batched dispatch covers the fleet
+    (``counts`` carries each panel row's true block depth so the fused
+    megakernel's K loop skips the fleet-global padding)."""
 
     blocks: Any             # device f32[P, NBR, K, bm, bn]
     cols: Any               # device i32[P, NBR, K]
+    counts: Any             # device i32[P, NBR]
     m: List[int]
     n: List[int]
     n_pad: int
@@ -216,10 +223,11 @@ class PallasBsrBackend:
 
     def prepare(self, W: CSRMatrix) -> _PallasLayerState:
         bsr = bsr_from_csr(W, self.block_shape, pad=True)
-        blocks, cols, _ = bsr.padded()
+        blocks, cols, counts = bsr.padded()
         return _PallasLayerState(
             blocks=blocks.astype(np.float32),
             cols=cols,
+            counts=counts.astype(np.int32),
             m=W.nrows,
             n=W.ncols,
             n_pad=bsr.shape[1],
@@ -264,15 +272,19 @@ class PallasBsrBackend:
 
     def _stack_layer(self, states, p_rows: int, nbr_max: int, k_max: int):
         """Stack one layer's per-worker operands into [p_rows, ...] host
-        panels (rows beyond ``len(states)`` stay zero — inert pad workers)."""
+        panels (rows beyond ``len(states)`` stay zero — inert pad workers,
+        whose ``counts`` of 0 also keep the fused megakernel's K loop off
+        them entirely)."""
         bm, bn = self.block_shape
         blocks = np.zeros((p_rows, nbr_max, k_max, bm, bn), dtype=np.float32)
         cols = np.zeros((p_rows, nbr_max, k_max), dtype=np.int32)
+        counts = np.zeros((p_rows, nbr_max), dtype=np.int32)
         for i, s in enumerate(states):
             nbr, k = s.blocks.shape[:2]
             blocks[i, :nbr, :k] = s.blocks
             cols[i, :nbr, :k] = s.cols
-        return blocks, cols
+            counts[i, :nbr] = s.counts
+        return blocks, cols, counts
 
     def fleet_prepare_all(
         self, layer_states: Sequence[Sequence[_PallasLayerState]]
@@ -287,11 +299,13 @@ class PallasBsrBackend:
         nbr_max, k_max, n_pad_max = maxima
         out: List[_PallasFleetState] = []
         for states in layer_states:
-            blocks, cols = self._stack_layer(states, len(states), nbr_max, k_max)
+            blocks, cols, counts = self._stack_layer(
+                states, len(states), nbr_max, k_max)
             out.append(
                 _PallasFleetState(
                     blocks=jnp.asarray(blocks),
                     cols=jnp.asarray(cols),
+                    counts=jnp.asarray(counts),
                     m=[s.m for s in states],
                     n=[s.n for s in states],
                     n_pad=n_pad_max,
@@ -346,6 +360,20 @@ class PallasBsrShardedBackend(PallasBsrBackend):
     unit.  When P is not divisible by the device count the panel is padded
     with all-zero workers whose outputs are never read.
 
+    ``dispatch`` picks the per-device execution:
+
+    * ``"fused"`` (default) — the fleet megakernel: ONE ``pallas_call`` per
+      device whose grid walks that device's P/D worker panels (worker index
+      folded into the grid, per-panel block counts bounding the K loop) —
+      no vmap, no XLA re-entry between workers.
+    * ``"vmap"`` — the PR 3 dispatch (``jax.vmap`` of the single-worker
+      Pallas body inside each shard), kept as the parity baseline and the
+      fallback when a kernel-level issue needs bisecting.
+
+    Both dispatches are bitwise-identical on the produced panels (the fused
+    K loop only skips all-zero padding terms; asserted in
+    ``tests/test_sharded_fleet.py``).
+
     ``mesh`` defaults to every visible device
     (:func:`repro.launch.mesh.make_worker_mesh`); pass an explicit mesh — or
     use ``run_fsi(..., mesh=...)`` — to pin the layout.  On CPU-only hosts
@@ -363,11 +391,16 @@ class PallasBsrShardedBackend(PallasBsrBackend):
         clip: float = ACTIVATION_CLIP,
         mesh: Any = None,
         axis_name: str = "worker",
+        dispatch: str = "fused",
     ):
         super().__init__(block_shape=block_shape, batch_block=batch_block,
                          interpret=interpret, clip=clip)
+        if dispatch not in ("fused", "vmap"):
+            raise ValueError(
+                f"dispatch must be 'fused' or 'vmap', got {dispatch!r}")
         self._mesh = mesh
         self.axis_name = axis_name
+        self.dispatch = dispatch
 
     @property
     def mesh(self):
@@ -383,7 +416,7 @@ class PallasBsrShardedBackend(PallasBsrBackend):
         return PallasBsrShardedBackend(
             block_shape=self.block_shape, batch_block=self.batch_block,
             interpret=self.interpret, clip=self.clip, mesh=mesh,
-            axis_name=self.axis_name,
+            axis_name=self.axis_name, dispatch=self.dispatch,
         )
 
     @property
@@ -392,7 +425,8 @@ class PallasBsrShardedBackend(PallasBsrBackend):
 
     @property
     def state_key(self) -> str:
-        return f"{super().state_key}:d{self.n_devices}:{self.axis_name}"
+        return (f"{super().state_key}:d{self.n_devices}:{self.axis_name}"
+                f":{self.dispatch}")
 
     def _sharding(self):
         from jax.sharding import NamedSharding, PartitionSpec
@@ -417,11 +451,13 @@ class PallasBsrShardedBackend(PallasBsrBackend):
         for states in layer_states:
             P = len(states)
             p_pad = -(-P // D) * D
-            blocks, cols = self._stack_layer(states, p_pad, nbr_max, k_max)
+            blocks, cols, counts = self._stack_layer(
+                states, p_pad, nbr_max, k_max)
             out.append(
                 _PallasShardedFleetState(
                     blocks=jax.device_put(blocks, sharding),
                     cols=jax.device_put(cols, sharding),
+                    counts=jax.device_put(counts, sharding),
                     m=[s.m for s in states],
                     n=[s.n for s in states],
                     n_pad=n_pad_max,
@@ -436,7 +472,10 @@ class PallasBsrShardedBackend(PallasBsrBackend):
     ) -> List[np.ndarray]:
         import jax
 
-        from repro.kernels.bsr_spmm.ops import bsr_spmm_fleet_sharded
+        from repro.kernels.bsr_spmm.ops import (
+            bsr_spmm_fleet_fused_sharded,
+            bsr_spmm_fleet_sharded,
+        )
 
         P = len(xs)
         batch = xs[0].shape[1]
@@ -444,19 +483,22 @@ class PallasBsrShardedBackend(PallasBsrBackend):
                      dtype=np.float32)
         for i, x in enumerate(xs):
             X[i, : x.shape[0]] = x
-        y = np.asarray(
-            bsr_spmm_fleet_sharded(
-                fleet_state.blocks,
-                fleet_state.cols,
-                jax.device_put(X, self._sharding()),
-                mesh=self.mesh,
-                axis_name=self.axis_name,
-                bias=float(bias),
-                clip=self.clip,
-                batch_block=self._bb(batch),
+        Xd = jax.device_put(X, self._sharding())
+        if self.dispatch == "fused":
+            y = bsr_spmm_fleet_fused_sharded(
+                fleet_state.blocks, fleet_state.cols, fleet_state.counts, Xd,
+                mesh=self.mesh, axis_name=self.axis_name, bias=float(bias),
+                clip=self.clip, batch_block=self._bb(batch),
                 interpret=self.interpret,
             )
-        )
+        else:
+            y = bsr_spmm_fleet_sharded(
+                fleet_state.blocks, fleet_state.cols, Xd,
+                mesh=self.mesh, axis_name=self.axis_name, bias=float(bias),
+                clip=self.clip, batch_block=self._bb(batch),
+                interpret=self.interpret,
+            )
+        y = np.asarray(y)
         return [y[i, : fleet_state.m[i]] for i in range(P)]
 
 

@@ -14,12 +14,26 @@ The math is executed for real (numpy), byte streams are really compressed
 and size-capped, and the clock/billing charges follow the algorithm order —
 including the compute/communication overlap the paper exploits (local MVP is
 charged *between* the sends and the receives).
+
+Two host execution modes drive the same algorithm:
+
+* the **per-worker** functions (``fsi_queue_send_and_local`` /
+  ``fsi_queue_recv`` and the object twins) run one simulated Lambda each;
+* the ``*_fleet`` variants batch the host-side hot path across all P
+  workers of a layer — one ``pack_rows_fleet`` call packs every worker's
+  outgoing row-sets, and the fleet drain decodes every pending chunk and
+  lands them with ONE vectorized scatter into a flat fleet buffer
+  (:class:`FleetRecvBuffers`).
+
+Both modes share the publish/drain helpers, so billed units, message
+counts, and per-worker clock charges are bit-identical by construction
+(asserted in ``tests/test_fleet_channels.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Literal, Sequence, Union
+from typing import Any, Callable, Dict, List, Literal, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -29,19 +43,24 @@ from repro.core.send_recv import LayerCommPlan
 from repro.core.sparse import CSRMatrix
 from repro.data.graphchallenge import GraphChallengeNet
 from repro.faas.object_service import ObjectFabric
-from repro.faas.payload import Chunk, decode_chunk, pack_rows
+from repro.faas.payload import Chunk, decode_chunk, pack_rows_fleet
 from repro.faas.queue_service import QueueFabric
 from repro.faas.worker import ComputeModel, WorkerState, estimate_worker_memory_bytes
 
 __all__ = [
     "WorkerLayerArtifact",
     "WorkerArtifacts",
+    "FleetRecvBuffers",
     "prepare_worker_artifacts",
     "fsi_queue_send_and_local",
+    "fsi_queue_send_and_local_fleet",
     "fsi_queue_recv",
+    "fsi_queue_recv_fleet",
     "fsi_queue_recv_and_finish",
     "fsi_object_send_and_local",
+    "fsi_object_send_and_local_fleet",
     "fsi_object_recv",
+    "fsi_object_recv_fleet",
     "fsi_object_recv_and_finish",
     "finish_layer",
     "charge_finish",
@@ -135,7 +154,8 @@ def prepare_worker_artifacts(
                 indices=col_pos.astype(np.int32),
                 data=W_rows.data,
             )
-            owned_in = np.intersect1d(prev_owned, needed)
+            # both operands are sorted-unique global row id sets
+            owned_in = np.intersect1d(prev_owned, needed, assume_unique=True)
             owned_positions = np.searchsorted(needed, owned_in)
             owned_source_positions = np.searchsorted(prev_owned, owned_in)
             send_positions = {
@@ -179,16 +199,8 @@ def prepare_worker_artifacts(
 
 
 # ---------------------------------------------------------------------------
-# Algorithm 1 — FSI with FSD-Inf-Queue
+# shared send/recv building blocks (per-worker and fleet modes)
 # ---------------------------------------------------------------------------
-
-
-def _nonzero_row_subset(rows: np.ndarray, vals: np.ndarray):
-    """Activation-sparsity exploitation (paper §III-C2): rows of x^{k-1} that
-    are entirely zero carry no information — the receive buffer is
-    zero-initialized — so they are dropped from the payload."""
-    keep = np.any(vals != 0.0, axis=1)
-    return rows[keep], vals[keep]
 
 
 def _empty_marker(layer: int, src: int, batch: int) -> Chunk:
@@ -198,6 +210,151 @@ def _empty_marker(layer: int, src: int, batch: int) -> Chunk:
         layer, src, np.zeros(0, np.int32), np.zeros((0, batch), np.float32), 0, 1
     )
     return Chunk(blob, raw_bytes=24)
+
+
+def _send_jobs(
+    art: WorkerLayerArtifact, x_prev: np.ndarray, rank: int,
+    exploit_sparsity: bool,
+) -> Tuple[List[tuple], List[int]]:
+    """Per-target ``(layer, src, rows, vals)`` pack jobs for one worker.
+
+    Activation-sparsity exploitation (paper §III-C2): rows of x^{k-1} that
+    are entirely zero carry no information — the receive buffer is
+    zero-initialized — so they are dropped from the payload.  The keep mask
+    is computed ONCE over the worker's whole panel and gathered per target:
+    one panel pass instead of |targets| sliced scans.
+    """
+    targets = sorted(art.send_global)
+    if not targets:
+        return [], []
+    keep_mask = np.any(x_prev != 0.0, axis=1) if exploit_sparsity else None
+    jobs: List[tuple] = []
+    for target in targets:
+        rows = art.send_global[target]
+        posn = art.send_positions[target]
+        if keep_mask is None:
+            vals = x_prev[posn]
+        else:
+            k = keep_mask[posn]
+            rows, vals = rows[k], x_prev[posn[k]]
+        jobs.append((art.layer, rank, rows, vals))
+    return jobs, targets
+
+
+def _collect_entries(
+    art: WorkerLayerArtifact, rank: int, batch: int,
+    packed: Sequence[Tuple[int, List[Chunk]]],
+) -> Tuple[List[Tuple[int, Chunk]], int]:
+    """(target, chunk) publish entries + raw-byte total for one worker; a
+    target whose payload packed to nothing still gets the per-source
+    completion marker (an empty byte string with total=1 — the paper's
+    message-attribute handling of multi-message sends)."""
+    entries: List[Tuple[int, Chunk]] = []
+    raw_total = 0
+    for target, chunks in packed:
+        if not chunks:
+            chunks = [_empty_marker(art.layer, rank, batch)]
+        for c in chunks:
+            entries.append((target, c))
+            raw_total += c.raw_bytes
+    return entries, raw_total
+
+
+def _queue_publish_entries(
+    entries: List[Tuple[int, Chunk]], worker: WorkerState, fabric: QueueFabric,
+    compute: ComputeModel, raw_total: int, send_threads: int,
+) -> None:
+    """Charge the pack time, batch the entries (≤10 messages and ≤256KB per
+    publish), and publish round-robin over ``send_threads`` lanes."""
+    worker.charge_seconds(raw_total / compute.pack_bandwidth * worker.slowdown)
+    batches: List[List[Tuple[int, Chunk]]] = []
+    cur: List[Tuple[int, Chunk]] = []
+    cur_bytes = 0
+    for target, c in entries:
+        if cur and (
+            len(cur) >= fabric.pricing.max_messages_per_publish
+            or cur_bytes + len(c) > fabric.pricing.max_publish_payload
+        ):
+            batches.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append((target, c))
+        cur_bytes += len(c)
+    if cur:
+        batches.append(cur)
+    if batches:
+        lane_time = fabric.publish_batches(
+            topic=worker.rank % fabric.n_topics, batches=batches,
+            at_time=worker.abs_time, lanes=send_threads,
+        )
+        worker.messages_sent += sum(len(b) for b in batches)
+        worker.bytes_sent += sum(len(c) for b in batches for _, c in b)
+        worker.advance_to_abs(max(lane_time))
+
+
+def _object_put_targets(
+    art: WorkerLayerArtifact, rank: int,
+    packed: Sequence[Tuple[int, List[Chunk]]], worker: WorkerState,
+    fabric: ObjectFabric, compute: ComputeModel, io_threads: int,
+) -> None:
+    """One object (or 0-byte ``.nul`` marker) per target, round-robin over
+    ``io_threads`` connections, then the pack-time charge."""
+    target_blobs = [(t, chunks if chunks else []) for t, chunks in packed]
+    lane_time = fabric.put_multiparts(
+        art.layer, rank, target_blobs, worker.abs_time, lanes=io_threads
+    )
+    worker.messages_sent += len(target_blobs)
+    worker.bytes_sent += sum(
+        len(c) for _, chunks in target_blobs for c in chunks
+    )
+    raw_total = sum(c.raw_bytes for _, chunks in target_blobs for c in chunks)
+    worker.charge_seconds(raw_total / compute.pack_bandwidth * worker.slowdown)
+    if target_blobs:
+        worker.advance_to_abs(max(lane_time))
+
+
+@dataclasses.dataclass
+class FleetRecvBuffers:
+    """One layer's receive buffers for the whole fleet, backed by a single
+    flat panel so the fleet drain lands every decoded chunk with one
+    vectorized scatter.  ``views[m]`` aliases worker ``m``'s compact input
+    buffer (rows = ``arts[m].needed_rows``)."""
+
+    flat: np.ndarray                 # f32[sum(needed_m), batch]
+    offsets: np.ndarray              # i64[P+1] row offsets into flat
+    views: List[np.ndarray]
+
+    @classmethod
+    def allocate(cls, arts: Sequence[WorkerLayerArtifact], batch: int
+                 ) -> "FleetRecvBuffers":
+        sizes = np.array([len(a.needed_rows) for a in arts], dtype=np.int64)
+        offsets = np.zeros(len(arts) + 1, dtype=np.int64)
+        np.cumsum(sizes, out=offsets[1:])
+        flat = np.zeros((int(offsets[-1]), batch), dtype=np.float32)
+        views = [flat[offsets[m]: offsets[m + 1]] for m in range(len(arts))]
+        return cls(flat=flat, offsets=offsets, views=views)
+
+
+def _fleet_local_overlap(
+    arts: Sequence[WorkerLayerArtifact], x_panels: Sequence[np.ndarray],
+    workers: Sequence[WorkerState], compute: ComputeModel, batch: int,
+) -> FleetRecvBuffers:
+    """Line 8 / line 9 for the whole fleet: one allocation + one scatter of
+    every worker's locally-owned rows, then the per-worker local-MVP charge."""
+    fb = FleetRecvBuffers.allocate(arts, batch)
+    pos = [fb.offsets[m] + art.owned_positions
+           for m, art in enumerate(arts) if art.owned_positions.size]
+    if pos:
+        vals = [x_panels[m][art.owned_source_positions]
+                for m, art in enumerate(arts) if art.owned_positions.size]
+        fb.flat[np.concatenate(pos)] = np.vstack(vals)
+    for art, worker in zip(arts, workers):
+        worker.charge_compute(art.local_flops * batch, compute)
+    return fb
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — FSI with FSD-Inf-Queue
+# ---------------------------------------------------------------------------
 
 
 def fsi_queue_send_and_local(
@@ -218,56 +375,49 @@ def fsi_queue_send_and_local(
     """
     batch = x_prev.shape[1] if x_prev.ndim == 2 else 1
     # ---- lines 3-7: extract rows, pack byte strings, publish batches -------
-    entries: List[tuple[int, Chunk]] = []
-    raw_total = 0
-    for target in sorted(art.send_global):
-        rows = art.send_global[target]
-        vals = x_prev[art.send_positions[target]]
-        if exploit_sparsity:
-            rows, vals = _nonzero_row_subset(rows, vals)
-        chunks = pack_rows(
-            art.layer, worker.rank, rows, vals, fabric.pricing.max_publish_payload
-        )
-        if not chunks:
-            # the target still awaits a per-source completion signal: an
-            # empty byte string with total=1 (message attributes carry the
-            # expected count, exactly the paper's multi-message handling)
-            chunks = [_empty_marker(art.layer, worker.rank, batch)]
-        for c in chunks:
-            entries.append((target, c))
-            raw_total += c.raw_bytes
-    worker.charge_seconds(raw_total / compute.pack_bandwidth * worker.slowdown)
-    # batch entries: ≤10 messages and ≤256KB per publish; round-robin threads
-    batches: List[List[tuple[int, Chunk]]] = []
-    cur: List[tuple[int, Chunk]] = []
-    cur_bytes = 0
-    for target, c in entries:
-        if cur and (
-            len(cur) >= fabric.pricing.max_messages_per_publish
-            or cur_bytes + len(c) > fabric.pricing.max_publish_payload
-        ):
-            batches.append(cur)
-            cur, cur_bytes = [], 0
-        cur.append((target, c))
-        cur_bytes += len(c)
-    if cur:
-        batches.append(cur)
-    lane_time = [worker.abs_time] * max(1, send_threads)
-    for i, b in enumerate(batches):
-        lane = i % len(lane_time)
-        lane_time[lane] = fabric.publish_batch(
-            topic=worker.rank % fabric.n_topics, entries=b, at_time=lane_time[lane]
-        )
-        worker.messages_sent += len(b)
-        worker.bytes_sent += sum(len(c) for _, c in b)
-    if batches:
-        worker.advance_to_abs(max(lane_time))
+    jobs, targets = _send_jobs(art, x_prev, worker.rank, exploit_sparsity)
+    packed = list(zip(targets, pack_rows_fleet(
+        jobs, fabric.pricing.max_publish_payload)))
+    entries, raw_total = _collect_entries(art, worker.rank, batch, packed)
+    _queue_publish_entries(entries, worker, fabric, compute, raw_total,
+                           send_threads)
 
     # ---- line 8: local MVP overlapped with in-flight communication --------
     x_buf = np.zeros((len(art.needed_rows), batch), dtype=np.float32)
     x_buf[art.owned_positions] = x_prev[art.owned_source_positions]
     worker.charge_compute(art.local_flops * batch, compute)
     return x_buf
+
+
+def fsi_queue_send_and_local_fleet(
+    arts: Sequence[WorkerLayerArtifact],
+    x_panels: Sequence[np.ndarray],
+    workers: Sequence[WorkerState],
+    fabric: QueueFabric,
+    compute: ComputeModel,
+    *,
+    send_threads: int = 8,
+    exploit_sparsity: bool = True,
+) -> FleetRecvBuffers:
+    """Algorithm 1 lines 3-8 for the WHOLE fleet: every worker's outgoing
+    row-sets are packed in one ``pack_rows_fleet`` call (shared normalization
+    + one deflate-state pool), then each worker publishes its own batches in
+    rank order — byte streams, publish batching, and clock charges are
+    bit-identical to P ``fsi_queue_send_and_local`` calls."""
+    batch = x_panels[0].shape[1]
+    jobs: List[tuple] = []
+    fleet_targets: List[List[int]] = []
+    for art, x_prev, worker in zip(arts, x_panels, workers):
+        wjobs, targets = _send_jobs(art, x_prev, worker.rank, exploit_sparsity)
+        jobs.extend(wjobs)
+        fleet_targets.append(targets)
+    packed_iter = pack_rows_fleet(jobs, fabric.pricing.max_publish_payload)
+    for art, worker, targets in zip(arts, workers, fleet_targets):
+        packed = [(t, next(packed_iter)) for t in targets]
+        entries, raw_total = _collect_entries(art, worker.rank, batch, packed)
+        _queue_publish_entries(entries, worker, fabric, compute, raw_total,
+                               send_threads)
+    return _fleet_local_overlap(arts, x_panels, workers, compute, batch)
 
 
 def charge_finish(
@@ -304,16 +454,17 @@ def finish_layer(
     return charge_finish(art, x_buf, x_out, worker, compute)
 
 
-def fsi_queue_recv(
+def _queue_drain_one(
     art: WorkerLayerArtifact,
-    x_buf: np.ndarray,
     worker: WorkerState,
     fabric: QueueFabric,
     compute: ComputeModel,
-) -> np.ndarray:
-    """Algorithm 1 lines 9-15 for one worker: long-poll until the buffer is
-    complete (compute deferred — see ``finish_layer``)."""
-    # ---- lines 9-15: long-poll until every source completes ----------------
+    emit: Callable[[np.ndarray, np.ndarray], None],
+) -> None:
+    """Algorithm 1 lines 9-15 for one worker: long-poll until every source
+    completes, handing each fresh chunk's (buffer positions, value view) to
+    ``emit``.  The per-worker and fleet drains share this loop, so the
+    (src, seq) dedupe and stale-layer handling cannot diverge."""
     # Completion is per-source via the 'total byte strings' message attribute
     # (paper: "we cater for the case where source P_n needs to send multiple
     # messages ... using message attributes"), since activation sparsity
@@ -346,14 +497,58 @@ def fsi_queue_recv(
                 continue
             seen_chunks.add((src, seq))
             if rows.size:
-                pos = np.searchsorted(art.needed_rows, rows)
-                x_buf[pos] = vals
+                emit(np.searchsorted(art.needed_rows, rows), vals)
             got_chunks[src] = got_chunks.get(src, 0) + 1
             if src in pending and got_chunks[src] >= total:
                 pending.discard(src)
         if receipts:
             worker.advance_to_abs(fabric.delete_batch(worker.rank, receipts, worker.abs_time))
+
+
+def fsi_queue_recv(
+    art: WorkerLayerArtifact,
+    x_buf: np.ndarray,
+    worker: WorkerState,
+    fabric: QueueFabric,
+    compute: ComputeModel,
+) -> np.ndarray:
+    """Algorithm 1 lines 9-15 for one worker: long-poll until the buffer is
+    complete (compute deferred — see ``finish_layer``)."""
+    def emit(pos: np.ndarray, vals: np.ndarray) -> None:
+        x_buf[pos] = vals            # the one copy of the zero-copy views
+
+    _queue_drain_one(art, worker, fabric, compute, emit)
     return x_buf
+
+
+def fsi_queue_recv_fleet(
+    arts: Sequence[WorkerLayerArtifact],
+    bufs: FleetRecvBuffers,
+    workers: Sequence[WorkerState],
+    fabric: QueueFabric,
+    compute: ComputeModel,
+) -> List[np.ndarray]:
+    """Fleet drain (Algorithm 1 lines 9-15 × P): every worker's queue is
+    drained with the shared dedupe loop, but decoded chunks are accumulated
+    as (global position, value view) pairs and land in ONE vectorized
+    scatter into the flat fleet buffer — the single copy the zero-copy
+    ``decode_chunk`` views ever see."""
+    pos_parts: List[np.ndarray] = []
+    val_parts: List[np.ndarray] = []
+    for m, (art, worker) in enumerate(zip(arts, workers)):
+        off = int(bufs.offsets[m])
+
+        def emit(pos: np.ndarray, vals: np.ndarray, _off=off) -> None:
+            pos_parts.append(_off + pos)
+            val_parts.append(vals)
+
+        _queue_drain_one(art, worker, fabric, compute, emit)
+    if pos_parts:
+        # positions are unique fleet-wide: workers' buffers are disjoint
+        # slices, sources own disjoint row sets, and (src, seq) dedupe keeps
+        # each chunk once — so one fancy-index assignment is exact.
+        bufs.flat[np.concatenate(pos_parts)] = np.vstack(val_parts)
+    return bufs.views
 
 
 def fsi_queue_recv_and_finish(
@@ -392,26 +587,10 @@ def fsi_object_send_and_local(
     # ---- lines 3-8: one object (or .nul) per target ------------------------
     # Empty payloads (all mapped rows zero under activation sparsity) become
     # 0-byte `.nul` markers, which readers retire without a GET (lines 4-5).
-    lane_time = [worker.abs_time] * max(1, io_threads)
-    raw_total = 0
-    lane = 0
-    for target in sorted(art.send_global):
-        rows = art.send_global[target]
-        vals = x_prev[art.send_positions[target]]
-        if exploit_sparsity:
-            rows, vals = _nonzero_row_subset(rows, vals)
-        chunks = pack_rows(art.layer, worker.rank, rows, vals, max_object_part)
-        raw_total += sum(c.raw_bytes for c in chunks)
-        lane_time[lane % len(lane_time)] = fabric.put_multipart(
-            art.layer, worker.rank, target, chunks if chunks else [],
-            lane_time[lane % len(lane_time)],
-        )
-        worker.messages_sent += 1
-        worker.bytes_sent += sum(len(c) for c in chunks)
-        lane += 1
-    worker.charge_seconds(raw_total / compute.pack_bandwidth * worker.slowdown)
-    if lane:
-        worker.advance_to_abs(max(lane_time))
+    jobs, targets = _send_jobs(art, x_prev, worker.rank, exploit_sparsity)
+    packed = list(zip(targets, pack_rows_fleet(jobs, max_object_part)))
+    _object_put_targets(art, worker.rank, packed, worker, fabric, compute,
+                        io_threads)
 
     # ---- line 9: local MVP overlap -----------------------------------------
     x_buf = np.zeros((len(art.needed_rows), batch), dtype=np.float32)
@@ -420,16 +599,43 @@ def fsi_object_send_and_local(
     return x_buf
 
 
-def fsi_object_recv(
+def fsi_object_send_and_local_fleet(
+    arts: Sequence[WorkerLayerArtifact],
+    x_panels: Sequence[np.ndarray],
+    workers: Sequence[WorkerState],
+    fabric: ObjectFabric,
+    compute: ComputeModel,
+    *,
+    io_threads: int = 8,
+    max_object_part: int = 8 * 1024 * 1024,
+    exploit_sparsity: bool = True,
+) -> FleetRecvBuffers:
+    """Algorithm 2 lines 3-9 for the whole fleet: one batched pack, then each
+    worker's PUTs in rank order — billing-identical to the per-worker path."""
+    batch = x_panels[0].shape[1]
+    jobs: List[tuple] = []
+    fleet_targets: List[List[int]] = []
+    for art, x_prev, worker in zip(arts, x_panels, workers):
+        wjobs, targets = _send_jobs(art, x_prev, worker.rank, exploit_sparsity)
+        jobs.extend(wjobs)
+        fleet_targets.append(targets)
+    packed_iter = pack_rows_fleet(jobs, max_object_part)
+    for art, worker, targets in zip(arts, workers, fleet_targets):
+        packed = [(t, next(packed_iter)) for t in targets]
+        _object_put_targets(art, worker.rank, packed, worker, fabric, compute,
+                            io_threads)
+    return _fleet_local_overlap(arts, x_panels, workers, compute, batch)
+
+
+def _object_drain_one(
     art: WorkerLayerArtifact,
-    x_buf: np.ndarray,
     worker: WorkerState,
     fabric: ObjectFabric,
     compute: ComputeModel,
-) -> np.ndarray:
+    emit: Callable[[np.ndarray, np.ndarray], None],
+) -> None:
     """Algorithm 2 lines 10-20 for one worker: LIST/GET until the recv map is
-    satisfied (compute deferred — see ``finish_layer``)."""
-    # ---- lines 10-20: LIST / GET until recv map satisfied ------------------
+    satisfied, handing each part's (positions, value view) to ``emit``."""
     expect = dict(art.recv_expect)
     seen: set[str] = set()
     while expect:
@@ -453,14 +659,52 @@ def fsi_object_recv(
             worker.bytes_received += len(blob)
             for part in ObjectFabric.split_multipart(bytes(blob)):
                 layer, src, rows, vals, _, _ = decode_chunk(part)
-                pos = np.searchsorted(art.needed_rows, rows)
-                x_buf[pos] = vals
+                emit(np.searchsorted(art.needed_rows, rows), vals)
             del expect[h.src]
             progress = True
         if expect and not progress:
             # back off one LIST interval before re-scanning the prefix
             worker.charge_seconds(fabric.list_latency)
+
+
+def fsi_object_recv(
+    art: WorkerLayerArtifact,
+    x_buf: np.ndarray,
+    worker: WorkerState,
+    fabric: ObjectFabric,
+    compute: ComputeModel,
+) -> np.ndarray:
+    """Algorithm 2 lines 10-20 for one worker: LIST/GET until the recv map is
+    satisfied (compute deferred — see ``finish_layer``)."""
+    def emit(pos: np.ndarray, vals: np.ndarray) -> None:
+        x_buf[pos] = vals
+
+    _object_drain_one(art, worker, fabric, compute, emit)
     return x_buf
+
+
+def fsi_object_recv_fleet(
+    arts: Sequence[WorkerLayerArtifact],
+    bufs: FleetRecvBuffers,
+    workers: Sequence[WorkerState],
+    fabric: ObjectFabric,
+    compute: ComputeModel,
+) -> List[np.ndarray]:
+    """Fleet drain (Algorithm 2 lines 10-20 × P) with one vectorized scatter
+    into the flat fleet buffer — the object twin of ``fsi_queue_recv_fleet``."""
+    pos_parts: List[np.ndarray] = []
+    val_parts: List[np.ndarray] = []
+    for m, (art, worker) in enumerate(zip(arts, workers)):
+        off = int(bufs.offsets[m])
+
+        def emit(pos: np.ndarray, vals: np.ndarray, _off=off) -> None:
+            pos_parts.append(_off + pos)
+            val_parts.append(vals)
+
+        _object_drain_one(art, worker, fabric, compute, emit)
+    if pos_parts:
+        bufs.flat[np.concatenate(pos_parts)] = np.vstack(val_parts)
+    return bufs.views
 
 
 def fsi_object_recv_and_finish(

@@ -103,6 +103,24 @@ class ObjectFabric:
         chunk = Chunk(joined, raw_bytes=sum(b.raw_bytes for b in blobs))
         return self.put_obj(layer, src, target, chunk, at_time)
 
+    def put_multiparts(
+        self, layer: int, src: int,
+        target_blobs: List[Tuple[int, List[Chunk]]], at_time: float,
+        lanes: int = 8,
+    ) -> List[float]:
+        """PUT one multipart object (or ``.nul``) per (target, chunks) pair,
+        round-robin over ``lanes`` concurrent connections starting at
+        ``at_time``; returns the per-lane completion times.  Billing is
+        exactly one ``put_multipart`` per target — the one-call entry point
+        the fleet send path uses for a layer's whole PUT schedule."""
+        lane_time = [at_time] * max(1, lanes)
+        for i, (target, blobs) in enumerate(target_blobs):
+            lane = i % len(lane_time)
+            lane_time[lane] = self.put_multipart(
+                layer, src, target, blobs, lane_time[lane]
+            )
+        return lane_time
+
     @staticmethod
     def split_multipart(blob: bytes) -> List[bytes]:
         out, off = [], 0

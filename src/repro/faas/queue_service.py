@@ -119,6 +119,21 @@ class QueueFabric:
             )
         return done
 
+    def publish_batches(
+        self, topic: int, batches: List[List[Tuple[int, Chunk]]],
+        at_time: float, lanes: int = 8,
+    ) -> List[float]:
+        """Publish a sequence of batches round-robin over ``lanes`` concurrent
+        connections starting at ``at_time``; returns the per-lane completion
+        times.  Billing is exactly ``len(batches)`` ``publish_batch`` calls —
+        this is the one-call entry point the fleet send path uses so a layer's
+        whole publish schedule is a single fabric interaction."""
+        lane_time = [at_time] * max(1, lanes)
+        for i, batch in enumerate(batches):
+            lane = i % len(lane_time)
+            lane_time[lane] = self.publish_batch(topic, batch, lane_time[lane])
+        return lane_time
+
     def _next_receipt(self) -> int:
         self._receipt += 1
         return self._receipt

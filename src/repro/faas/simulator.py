@@ -37,9 +37,13 @@ from repro.core.fsi import (
     WorkerArtifacts,
     charge_finish,
     fsi_object_recv,
+    fsi_object_recv_fleet,
     fsi_object_send_and_local,
+    fsi_object_send_and_local_fleet,
     fsi_queue_recv,
+    fsi_queue_recv_fleet,
     fsi_queue_send_and_local,
+    fsi_queue_send_and_local_fleet,
     prepare_worker_artifacts,
     run_serial,
 )
@@ -120,6 +124,7 @@ def run_fsi(
     partition: Optional[PartitionResult] = None,
     compute_backend: Union[str, ComputeBackend, None] = None,
     mesh: Optional[object] = None,
+    channel_batching: bool = True,
 ) -> FsiRunResult:
     latency = latency or LatencyModel()
     compute = compute or ComputeModel()
@@ -221,29 +226,49 @@ def run_fsi(
     ]
     for k in range(net.n_layers):
         t_before = [w.clock for w in workers]
-        # Phase 1 — every worker publishes and runs its overlapped local MVP.
-        bufs: List[np.ndarray] = []
-        for m in range(P):
-            art = artifacts[m].layers[k]
+        arts_k = [artifacts[m].layers[k] for m in range(P)]
+        # Phases 1+2 — publish + overlapped local MVP, then drain the channel.
+        # ``channel_batching`` (the default) runs the fleet-batched host path:
+        # one pack pass and one vectorized drain scatter per layer instead of
+        # O(P) Python-level passes.  Billed charges are bit-identical either
+        # way (the fleet variants share the publish/drain helpers — asserted
+        # in tests/test_fleet_channels.py).
+        bufs: List[np.ndarray]
+        if channel_batching:
             if channel == "queue":
-                bufs.append(fsi_queue_send_and_local(
-                    art, x_panels[m], workers[m], fabric, compute,
+                fleet_bufs = fsi_queue_send_and_local_fleet(
+                    arts_k, x_panels, workers, fabric, compute,
                     exploit_sparsity=exploit_sparsity,
-                ))
+                )
+                bufs = fsi_queue_recv_fleet(arts_k, fleet_bufs, workers,
+                                            fabric, compute)
             else:
-                bufs.append(fsi_object_send_and_local(
-                    art, x_panels[m], workers[m], fabric, compute,
+                fleet_bufs = fsi_object_send_and_local_fleet(
+                    arts_k, x_panels, workers, fabric, compute,
                     exploit_sparsity=exploit_sparsity,
-                ))
-        # Phase 2 — every worker drains its channel, then the layer finishes:
-        # either per worker, or (fleet mode) with one batched device dispatch
-        # covering all P panels.  Billed charges are identical either way.
-        for m in range(P):
-            art = artifacts[m].layers[k]
-            if channel == "queue":
-                bufs[m] = fsi_queue_recv(art, bufs[m], workers[m], fabric, compute)
-            else:
-                bufs[m] = fsi_object_recv(art, bufs[m], workers[m], fabric, compute)
+                )
+                bufs = fsi_object_recv_fleet(arts_k, fleet_bufs, workers,
+                                             fabric, compute)
+        else:
+            bufs = []
+            for m in range(P):
+                art = arts_k[m]
+                if channel == "queue":
+                    bufs.append(fsi_queue_send_and_local(
+                        art, x_panels[m], workers[m], fabric, compute,
+                        exploit_sparsity=exploit_sparsity,
+                    ))
+                else:
+                    bufs.append(fsi_object_send_and_local(
+                        art, x_panels[m], workers[m], fabric, compute,
+                        exploit_sparsity=exploit_sparsity,
+                    ))
+            for m in range(P):
+                art = arts_k[m]
+                if channel == "queue":
+                    bufs[m] = fsi_queue_recv(art, bufs[m], workers[m], fabric, compute)
+                else:
+                    bufs[m] = fsi_object_recv(art, bufs[m], workers[m], fabric, compute)
         if fleet_states is not None:
             outs = backend.fleet_apply(fleet_states[k], bufs, net.bias)
         else:

@@ -44,6 +44,139 @@ def _kernel(cols_ref, blocks_ref, x_ref, y_ref, *, bn: int, k_max: int,
     y_ref[...] = jnp.clip(acc + bias, 0.0, clip)
 
 
+def _fleet_kernel(counts_ref, cols_ref, blocks_ref, x_ref, y_ref, *, bn: int,
+                  k_max: int, bias: float, clip: float, count_bounded: bool):
+    """One (worker panel, batch-panel) cell of the fleet megakernel.
+
+    The cell computes its worker's ENTIRE layer panel — all NBR row blocks.
+    Two lowerings of the same math:
+
+    * ``count_bounded`` (compiled TPU dispatch): nested ``fori_loop`` over
+      row blocks and each row's REAL block count (``counts_ref``, the BSR
+      indptr diff) with ``pl.ds`` x-panel slices — the scalar-core loops
+      skip the fleet-global K padding entirely.
+    * interpreter (CPU hosts): one fancy-index gather of the referenced x
+      block rows plus K batched [NBR, bm, bn] × [NBR, bn, bb] matmuls
+      accumulated in ascending-k order — a tiny constant-size trace that
+      executes as vectorized host ops instead of thousands of per-cell
+      interpreter steps, with the SAME per-block contraction and k-sum
+      order as the sequential lowerings (bitwise-parity asserted against
+      the vmap dispatch in ``tests/test_sharded_fleet.py``).
+
+    Padding blocks are all-zero, so the count bound only drops exact +0.0
+    terms — the two lowerings agree bitwise.
+    """
+    nbr, _, bm = blocks_ref.shape[1:4]
+    bb = y_ref.shape[2]
+    if count_bounded:
+        def row(r, _):
+            def body(i, acc):
+                c = cols_ref[0, r, i]
+                xb = x_ref[0, pl.ds(c * bn, bn), :]
+                wb = blocks_ref[0, r, i]
+                return acc + jnp.dot(wb, xb,
+                                     preferred_element_type=jnp.float32)
+
+            acc = jax.lax.fori_loop(0, counts_ref[0, r], body,
+                                    jnp.zeros((bm, bb), jnp.float32))
+            y_ref[0, pl.ds(r * bm, bm), :] = jnp.clip(acc + bias, 0.0, clip)
+            return 0
+
+        jax.lax.fori_loop(0, nbr, row, 0)
+    else:
+        offs = jax.lax.broadcasted_iota(jnp.int32, (nbr, k_max, bn), 2)
+        idx = (cols_ref[0] * bn)[:, :, None] + offs        # [NBR, K, bn]
+        xg = x_ref[0][idx.reshape(nbr, k_max * bn), :]     # [NBR·K·bn, bb]
+        xg = xg.reshape(nbr, k_max, bn, bb)
+        acc = jnp.zeros((nbr, bm, bb), jnp.float32)
+        for i in range(k_max):  # ascending k, same accumulation order as
+            acc = acc + jax.lax.dot_general(   # the sequential lowerings
+                blocks_ref[0, :, i], xg[:, i],
+                (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32)
+        y_ref[0] = jnp.clip(acc.reshape(nbr * bm, bb) + bias, 0.0, clip)
+
+
+def _fleet_host_lowering(blocks, cols, x, bias: float, clip: float):
+    """The megakernel math for the whole device shard as straight XLA ops.
+
+    Identical to ``_fleet_kernel``'s interpreter branch with the worker axis
+    vectorized in: one fancy gather of every referenced x block row plus K
+    batched matmuls accumulated in ascending-k order.  The Pallas
+    interpreter pays ~1ms of staging per grid cell on CPU hosts, so the
+    backends route ``interpret=True`` dispatch here; bitwise parity with
+    the interpreted Pallas grid is asserted in ``tests/test_kernels.py``.
+    """
+    p, nbr, k_max, bm, bn = blocks.shape
+    b = x.shape[2]
+    offs = jax.lax.broadcasted_iota(jnp.int32, (p, nbr, k_max, bn), 3)
+    idx = (cols * bn)[..., None] + offs                    # [P, NBR, K, bn]
+    xg = x[jnp.arange(p)[:, None], idx.reshape(p, -1)]     # [P, NBR·K·bn, B]
+    xg = xg.reshape(p, nbr, k_max, bn, b)
+    acc = jnp.zeros((p, nbr, bm, b), jnp.float32)
+    for i in range(k_max):  # ascending k — the sequential accumulation order
+        acc = acc + jax.lax.dot_general(
+            blocks[:, :, i], xg[:, :, i],
+            (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)
+    return jnp.clip(acc.reshape(p, nbr * bm, b) + bias, 0.0, clip)
+
+
+def bsr_spmm_fleet_megakernel(
+    blocks: jnp.ndarray,   # [P, NBR, K, bm, bn] — stacked worker panels
+    cols: jnp.ndarray,     # [P, NBR, K] int32
+    counts: jnp.ndarray,   # [P, NBR] int32 — real blocks per panel row
+    x: jnp.ndarray,        # [P, N, B]
+    bias: float,
+    clip: float = 32.0,
+    batch_block: int = 128,
+    interpret: bool = True,
+    force_grid: bool = False,
+) -> jnp.ndarray:
+    """The whole worker fleet (or one device's shard of it) in ONE
+    ``pallas_call``: the grid iterates the device's blocked worker panels
+    (leading grid dimension = worker index) × batch panels, and each cell
+    streams its worker's full row-block set — so every panel flows through
+    the kernel without re-entering XLA (or a vmap batching rule) between
+    workers.
+
+    The per-worker BSR structure arrives device-local from
+    ``fleet_prepare_all``: padded ``blocks``/``cols`` panels concatenated
+    along the worker axis plus ``counts`` (the per-row true block count, the
+    BSR indptr diff) which bounds the compiled K loops — see
+    ``_fleet_kernel`` for the two lowerings.
+
+    ``interpret=True`` (CPU hosts) routes through
+    :func:`_fleet_host_lowering` — the same math as vectorized XLA ops —
+    because the Pallas interpreter's per-grid-cell staging dominates at
+    fleet grid sizes; pass ``force_grid=True`` to run the interpreted
+    Pallas grid itself (the parity tests do).  Returns ``y [P, NBR*bm, B]``.
+    """
+    p, nbr, k_max, bm, bn = blocks.shape
+    p2, n, b = x.shape
+    assert p == p2, (p, p2)
+    if interpret and not force_grid:
+        return _fleet_host_lowering(blocks, cols, x, bias, clip)
+    bb = min(batch_block, b)
+    assert b % bb == 0, "batch_block (clamped to batch) must divide batch"
+    grid = (p, b // bb)
+    return pl.pallas_call(
+        functools.partial(_fleet_kernel, bn=bn, k_max=k_max, bias=bias,
+                          clip=clip, count_bounded=not interpret),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, nbr), lambda w, j: (w, 0)),              # counts
+            pl.BlockSpec((1, nbr, k_max), lambda w, j: (w, 0, 0)),    # cols
+            pl.BlockSpec((1, nbr, k_max, bm, bn),
+                         lambda w, j: (w, 0, 0, 0, 0)),               # blocks
+            pl.BlockSpec((1, n, bb), lambda w, j: (w, 0, j)),         # x panel
+        ],
+        out_specs=pl.BlockSpec((1, nbr * bm, bb), lambda w, j: (w, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((p, nbr * bm, b), jnp.float32),
+        interpret=interpret,
+    )(counts, cols, blocks, x)
+
+
 def bsr_spmm_fused(
     blocks: jnp.ndarray,   # [NBR, K, bm, bn]
     cols: jnp.ndarray,     # [NBR, K] int32
@@ -56,7 +189,7 @@ def bsr_spmm_fused(
     nbr, k_max, bm, bn = blocks.shape
     n, b = x.shape
     bb = min(batch_block, b)
-    assert b % bb == 0, "batch must divide batch_block"
+    assert b % bb == 0, "batch_block (clamped to batch) must divide batch"
     grid = (nbr, b // bb)
     return pl.pallas_call(
         functools.partial(_kernel, bn=bn, k_max=k_max, bias=bias, clip=clip),

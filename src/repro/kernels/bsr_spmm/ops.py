@@ -6,10 +6,19 @@
                      operands (see ``core.backends.PallasBsrBackend``).
 ``bsr_spmm_fleet_sharded`` — the same fleet panel laid out over a device
                      mesh: ``shard_map`` splits the worker axis across the
-                     mesh's ``worker`` axis and each device runs the Pallas
-                     BSR body over its block of P/D workers, so simulated
-                     Lambdas map onto devices instead of one fused vmap
-                     (see ``core.backends.PallasBsrShardedBackend``).
+                     mesh's ``worker`` axis and each device runs a vmap of
+                     the Pallas BSR body over its block of P/D workers (the
+                     PR 3 dispatch, kept as the ``dispatch="vmap"`` fallback
+                     and perf baseline).
+``bsr_spmm_fleet_fused``   — the fleet megakernel on one device: ONE
+                     ``pallas_call`` whose grid walks every worker's row
+                     blocks (worker index folded into the grid), with the
+                     per-panel block counts bounding the K loop.
+``bsr_spmm_fleet_fused_sharded`` — the megakernel per mesh device: shard_map
+                     splits the worker axis and each device runs a single
+                     fused grid over its P/D worker panels — no vmap, no XLA
+                     re-entry between workers
+                     (``core.backends.PallasBsrShardedBackend`` default).
 """
 
 from __future__ import annotations
@@ -20,10 +29,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparse import BSRMatrix
-from repro.kernels.bsr_spmm.bsr_spmm import bsr_spmm_fused
+from repro.kernels.bsr_spmm.bsr_spmm import (
+    bsr_spmm_fleet_megakernel,
+    bsr_spmm_fused,
+)
 
 __all__ = ["sparse_layer_apply", "prepare_bsr_operands", "bsr_spmm",
-           "bsr_spmm_fleet", "bsr_spmm_fleet_sharded"]
+           "bsr_spmm_fleet", "bsr_spmm_fleet_sharded",
+           "bsr_spmm_fleet_fused", "bsr_spmm_fleet_fused_sharded"]
 
 
 def prepare_bsr_operands(bsr: BSRMatrix):
@@ -95,6 +108,59 @@ def bsr_spmm_fleet_sharded(blocks, cols, x, *, mesh, axis_name: str = "worker",
     fn = _fleet_sharded_fn(mesh, axis_name, float(bias), float(clip),
                            int(batch_block), bool(interpret))
     return fn(blocks, cols, x)
+
+
+@partial(jax.jit, static_argnames=("bias", "clip", "batch_block", "interpret"))
+def bsr_spmm_fleet_fused(blocks, cols, counts, x, *, bias: float,
+                         clip: float = 32.0, batch_block: int = 128,
+                         interpret: bool = True):
+    """Fused fleet dispatch on one device: blocks [P, NBR, K, bm, bn], cols
+    [P, NBR, K], counts i32[P, NBR], x [P, N, B] → y [P, NBR*bm, B] through a
+    single ``pallas_call`` (grid = worker panels × batch panels)."""
+    return bsr_spmm_fleet_megakernel(
+        blocks, cols, counts, x, bias=bias, clip=clip,
+        batch_block=batch_block, interpret=interpret,
+    )
+
+
+@lru_cache(maxsize=None)
+def _fleet_fused_sharded_fn(mesh, axis_name: str, bias: float, clip: float,
+                            batch_block: int, interpret: bool):
+    """Jit-cached shard_map dispatch of the fleet megakernel: one fused
+    Pallas grid per device instead of a vmap over that device's workers."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map_compat
+
+    def local(blocks, cols, counts, x):
+        # Per-device body: ONE pallas_call streaming this device's block of
+        # P/D worker panels (worker index = leading grid dimension).  No
+        # cross-device collectives — workers are independent, exactly the
+        # paper's isolation model.
+        return bsr_spmm_fleet_megakernel(
+            blocks, cols, counts, x, bias=bias, clip=clip,
+            batch_block=batch_block, interpret=interpret,
+        )
+
+    spec = P(axis_name)  # shard the leading worker axis; trailing dims whole
+    return jax.jit(
+        shard_map_compat(local, mesh,
+                         in_specs=(spec, spec, spec, spec), out_specs=spec)
+    )
+
+
+def bsr_spmm_fleet_fused_sharded(blocks, cols, counts, x, *, mesh,
+                                 axis_name: str = "worker", bias: float,
+                                 clip: float = 32.0, batch_block: int = 128,
+                                 interpret: bool = True):
+    """Mesh-sharded megakernel dispatch: same operand contract as
+    ``bsr_spmm_fleet_fused`` with P divisible by the mesh's ``axis_name``
+    size (pad with zero workers upstream otherwise — their ``counts`` are 0
+    so the K loop never touches them).  Each device executes one fused
+    Pallas grid over its contiguous block of workers."""
+    fn = _fleet_fused_sharded_fn(mesh, axis_name, float(bias), float(clip),
+                                 int(batch_block), bool(interpret))
+    return fn(blocks, cols, counts, x)
 
 
 def sparse_layer_apply(bsr: BSRMatrix, x, bias: float, clip: float = 32.0,

@@ -44,6 +44,57 @@ class TestPayload:
     def test_pack_empty(self):
         assert pack_rows(0, 0, np.zeros(0, np.int32), np.zeros((0, 4), np.float32), 1024) == []
 
+    def test_pack_incompressible_tiny_cap_no_recursion(self):
+        """Adversarial re-splitting: high-entropy values at a tiny cap drive
+        the emit path through many halvings.  The explicit work-stack must
+        survive with a crushed Python recursion limit (the recursive version
+        could not), keep every chunk under the cap unless it is a single
+        row, and conserve the row set exactly."""
+        import sys
+
+        rng = np.random.default_rng(0)
+        n = 4096
+        rows = np.arange(n, dtype=np.int32)
+        vals = rng.standard_normal((n, 16)).astype(np.float32)  # incompressible
+        cap = 700  # a handful of rows per message at best
+        limit = sys.getrecursionlimit()
+        try:
+            sys.setrecursionlimit(60)
+            chunks = pack_rows(0, 1, rows, vals, cap)
+        finally:
+            sys.setrecursionlimit(limit)
+        assert len(chunks) > n // 64  # really did split hard
+        got_rows, got_vals = [], []
+        for seq, c in enumerate(chunks):
+            _, src, r, v, s, total = decode_chunk(bytes(c))
+            assert (src, s, total) == (1, seq, len(chunks))
+            assert len(c) <= cap or len(r) == 1
+            got_rows.append(r)
+            got_vals.append(v)
+        np.testing.assert_array_equal(np.concatenate(got_rows), rows)
+        np.testing.assert_array_equal(np.vstack(got_vals), vals)
+
+    def test_decode_chunk_zero_copy_views(self):
+        """``decode_chunk`` must hand back read-only views into the decoded
+        body — no per-message copies; the recv scatter is the single copy
+        site."""
+        rows = np.array([3, 9, 100], dtype=np.int32)
+        vals = np.arange(12, dtype=np.float32).reshape(3, 4)
+        for compressed in (True, False):
+            blob = encode_chunk(7, 2, rows, vals, 0, 1, compress=compressed)
+            _, _, r2, v2, _, _ = decode_chunk(blob, compressed=compressed)
+            for arr in (r2, v2):
+                assert not arr.flags.owndata, "decode_chunk copied"
+                assert not arr.flags.writeable
+            with pytest.raises((ValueError, RuntimeError)):
+                v2[0, 0] = 1.0
+            np.testing.assert_array_equal(r2, rows)
+            np.testing.assert_array_equal(v2, vals)
+            # scatter-style reads still work (the one materialization)
+            buf = np.zeros((4, 4), np.float32)
+            buf[[0, 1, 2]] = v2
+            np.testing.assert_array_equal(buf[:3], vals)
+
     @settings(max_examples=25, deadline=None)
     @given(
         n=st.integers(min_value=1, max_value=500),

@@ -232,10 +232,13 @@ class TestCompressedPsum:
 
 from repro.core.cost_model import AWS_PRICING
 from repro.core.fsi import (
+    FleetRecvBuffers,
     finish_layer,
     fsi_object_recv,
+    fsi_object_recv_fleet,
     fsi_object_send_and_local,
     fsi_queue_recv,
+    fsi_queue_recv_fleet,
     fsi_queue_send_and_local,
     prepare_worker_artifacts,
 )
@@ -312,7 +315,10 @@ OBJECT_FAULTS = {
 class TestChannelFailurePaths:
     """Payload reassembly must be idempotent: the FSI recv loops key every
     write by global row id and every completion by (src, seq), so redelivered
-    or reordered chunks change nothing but billing noise."""
+    or reordered chunks change nothing but billing noise.  Both drain paths
+    — the per-worker loops and the fleet drain's one vectorized scatter —
+    run the same fault fabrics (they share ``_queue_drain_one`` /
+    ``_object_drain_one``, and this parametrization keeps it that way)."""
 
     P = 3
 
@@ -325,48 +331,77 @@ class TestChannelFailurePaths:
         artifacts = prepare_worker_artifacts(net.layers, partition, plans)
         return net, x0, artifacts, dense_inference(net, x0)
 
-    def _run(self, case, channel, fabric):
+    def _run(self, case, channel, fabric, drain="perworker"):
         net, x0, artifacts, _ = case
         compute = ComputeModel()
         workers = [WorkerState(rank=m, memory_mb=2000) for m in range(self.P)]
         panels = [x0[artifacts[m].x0_rows].astype(np.float32)
                   for m in range(self.P)]
         for k in range(net.n_layers):
+            arts = [artifacts[m].layers[k] for m in range(self.P)]
             bufs = []
             for m in range(self.P):
-                art = artifacts[m].layers[k]
                 if channel == "queue":
                     bufs.append(fsi_queue_send_and_local(
-                        art, panels[m], workers[m], fabric, compute))
+                        arts[m], panels[m], workers[m], fabric, compute))
                 else:
                     bufs.append(fsi_object_send_and_local(
-                        art, panels[m], workers[m], fabric, compute,
+                        arts[m], panels[m], workers[m], fabric, compute,
                         max_object_part=1600))
-            for m in range(self.P):
-                art = artifacts[m].layers[k]
+            if drain == "fleet":
+                fb = FleetRecvBuffers.allocate(arts, panels[0].shape[1])
+                for m in range(self.P):
+                    fb.views[m][:] = bufs[m]
                 if channel == "queue":
-                    bufs[m] = fsi_queue_recv(art, bufs[m], workers[m], fabric,
-                                             compute)
+                    bufs = fsi_queue_recv_fleet(arts, fb, workers, fabric,
+                                                compute)
                 else:
-                    bufs[m] = fsi_object_recv(art, bufs[m], workers[m], fabric,
-                                              compute)
-                panels[m] = finish_layer(art, bufs[m], workers[m], compute,
-                                         net.bias)
+                    bufs = fsi_object_recv_fleet(arts, fb, workers, fabric,
+                                                 compute)
+                for m in range(self.P):
+                    panels[m] = finish_layer(arts[m], bufs[m], workers[m],
+                                             compute, net.bias)
+            else:
+                for m in range(self.P):
+                    if channel == "queue":
+                        bufs[m] = fsi_queue_recv(arts[m], bufs[m], workers[m],
+                                                 fabric, compute)
+                    else:
+                        bufs[m] = fsi_object_recv(arts[m], bufs[m], workers[m],
+                                                  fabric, compute)
+                    panels[m] = finish_layer(arts[m], bufs[m], workers[m],
+                                             compute, net.bias)
         order = np.argsort(np.concatenate(
             [artifacts[m].layers[-1].out_rows for m in range(self.P)]))
         return np.concatenate(panels)[order]
 
+    @pytest.mark.parametrize("drain", ["perworker", "fleet"])
     @pytest.mark.parametrize("fault", sorted(QUEUE_FAULTS))
-    def test_queue_reassembly_idempotent(self, case, fault):
+    def test_queue_reassembly_idempotent(self, case, fault, drain):
         fabric = QUEUE_FAULTS[fault](self.P, pricing=SMALL_PRICING)
-        out = self._run(case, "queue", fabric)
+        out = self._run(case, "queue", fabric, drain=drain)
         np.testing.assert_allclose(out, case[3], rtol=1e-4, atol=1e-4)
 
+    @pytest.mark.parametrize("drain", ["perworker", "fleet"])
     @pytest.mark.parametrize("fault", sorted(OBJECT_FAULTS))
-    def test_object_reassembly_idempotent(self, case, fault):
+    def test_object_reassembly_idempotent(self, case, fault, drain):
         fabric = OBJECT_FAULTS[fault](self.P)
-        out = self._run(case, "object", fabric)
+        out = self._run(case, "object", fabric, drain=drain)
         np.testing.assert_allclose(out, case[3], rtol=1e-4, atol=1e-4)
+
+    def test_queue_faulty_fabric_drains_identical_across_paths(self, case):
+        """Same duplicate+out-of-order fabric state, drained per-worker vs
+        fleet: identical buffers AND identical billing counters — the
+        (src, seq) dedupe lives in one shared loop."""
+        results = {}
+        for mode in ("perworker", "fleet"):
+            fabric = DuplicatingReorderingQueueFabric(
+                self.P, pricing=SMALL_PRICING)
+            out = self._run(case, "queue", fabric, drain=mode)
+            results[mode] = (out, dict(vars(fabric.metrics)))
+        np.testing.assert_array_equal(results["perworker"][0],
+                                      results["fleet"][0])
+        assert results["perworker"][1] == results["fleet"][1]
 
     def test_queue_duplicate_of_first_chunk_does_not_retire_source(self, case):
         """Deterministic repro of the premature-retirement hazard: the first

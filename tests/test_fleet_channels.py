@@ -1,0 +1,203 @@
+"""Fleet-batched channel hot path ≡ per-worker path — bit-identical billing.
+
+The tentpole invariant of the batched pack/drain rewrite: ``run_fsi`` with
+``channel_batching=True`` (one ``pack_rows_fleet`` call + one vectorized
+drain scatter per layer) must produce byte-identical wire traffic and
+bit-identical billing — publish units, SQS calls, S3 puts/gets/lists,
+message counts, raw/wire volumes, and every per-worker clock — against the
+per-worker reference path, on both channels.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.fsi import (
+    FleetRecvBuffers,
+    fsi_object_recv,
+    fsi_object_recv_fleet,
+    fsi_object_send_and_local,
+    fsi_object_send_and_local_fleet,
+    fsi_queue_recv,
+    fsi_queue_recv_fleet,
+    fsi_queue_send_and_local,
+    fsi_queue_send_and_local_fleet,
+    prepare_worker_artifacts,
+)
+from repro.core.partitioner import partition_network
+from repro.core.send_recv import build_comm_plans
+from repro.data.graphchallenge import dense_inference, make_inputs, make_sparse_dnn
+from repro.faas.object_service import ObjectFabric
+from repro.faas.payload import pack_rows, pack_rows_fleet
+from repro.faas.queue_service import QueueFabric
+from repro.faas.simulator import run_fsi
+from repro.faas.worker import ComputeModel, WorkerState
+
+HAVE_JAX = True
+try:
+    import jax  # noqa: F401
+except ModuleNotFoundError:  # pragma: no cover
+    HAVE_JAX = False
+
+
+class TestPackRowsFleet:
+    def test_byte_identical_to_per_job_pack(self):
+        """The batched entry point must emit exactly the bytes of one
+        ``pack_rows`` call per job (wire volume is billed — any drift would
+        silently change costs between the two send paths)."""
+        rng = np.random.default_rng(3)
+        jobs = []
+        for src in range(5):
+            n = int(rng.integers(0, 400))
+            rows = np.sort(rng.choice(10**5, size=n, replace=False)).astype(np.int32)
+            vals = rng.standard_normal((n, 8)).astype(np.float32)
+            jobs.append((2, src, rows, vals))
+        for cap in (512, 4096, 262144):
+            batched = list(pack_rows_fleet(jobs, cap))
+            for job, got in zip(jobs, batched):
+                want = pack_rows(*job, cap)
+                assert [bytes(c) for c in got] == [bytes(c) for c in want]
+                assert [c.raw_bytes for c in got] == [c.raw_bytes for c in want]
+
+    def test_uncompressed_mode(self):
+        rows = np.arange(10, dtype=np.int32)
+        vals = np.ones((10, 4), np.float32)
+        a = list(pack_rows_fleet([(0, 1, rows, vals)], 4096, compress=False))[0]
+        b = pack_rows(0, 1, rows, vals, 4096, compress=False)
+        assert [bytes(c) for c in a] == [bytes(c) for c in b]
+
+
+class TestFleetRecvBuffers:
+    def test_views_alias_flat(self):
+        net = make_sparse_dnn(64, n_layers=1, seed=0)
+        partition = partition_network(net.layers, 3, method="hgp", seed=0)
+        plans = build_comm_plans(net.layers, partition)
+        arts = [a.layers[0] for a in
+                prepare_worker_artifacts(net.layers, partition, plans)]
+        fb = FleetRecvBuffers.allocate(arts, batch=4)
+        assert fb.flat.shape[0] == sum(len(a.needed_rows) for a in arts)
+        for m, art in enumerate(arts):
+            assert fb.views[m].base is fb.flat
+            assert fb.views[m].shape == (len(art.needed_rows), 4)
+        fb.views[1][:] = 7.0
+        lo, hi = int(fb.offsets[1]), int(fb.offsets[2])
+        assert np.all(fb.flat[lo:hi] == 7.0)
+
+
+def _phase_workers(P):
+    return [WorkerState(rank=m, memory_mb=2000) for m in range(P)]
+
+
+class TestFunctionLevelParity:
+    """Per-worker and fleet send/drain must leave identical buffers, clocks,
+    counters, and fabric metrics for the same layer inputs."""
+
+    P = 4
+
+    @pytest.fixture(scope="class")
+    def case(self):
+        net = make_sparse_dnn(128, n_layers=2, seed=1)
+        x0 = make_inputs(128, 8, seed=2)
+        partition = partition_network(net.layers, self.P, method="hgp", seed=0)
+        plans = build_comm_plans(net.layers, partition)
+        artifacts = prepare_worker_artifacts(net.layers, partition, plans)
+        return net, x0, artifacts
+
+    def _snap(self, workers, fabric):
+        return ([(w.clock, w.messages_sent, w.bytes_sent,
+                  w.messages_received, w.bytes_received) for w in workers],
+                dict(vars(fabric.metrics)))
+
+    @pytest.mark.parametrize("channel", ["queue", "object"])
+    def test_layer_parity(self, case, channel):
+        net, x0, artifacts = case
+        compute = ComputeModel()
+        results = {}
+        for mode in ("perworker", "fleet"):
+            fabric = (QueueFabric(self.P) if channel == "queue"
+                      else ObjectFabric(self.P))
+            workers = _phase_workers(self.P)
+            panels = [x0[artifacts[m].x0_rows].astype(np.float32)
+                      for m in range(self.P)]
+            arts = [artifacts[m].layers[0] for m in range(self.P)]
+            if mode == "perworker":
+                if channel == "queue":
+                    bufs = [fsi_queue_send_and_local(
+                        arts[m], panels[m], workers[m], fabric, compute)
+                        for m in range(self.P)]
+                    bufs = [fsi_queue_recv(arts[m], bufs[m], workers[m],
+                                           fabric, compute)
+                            for m in range(self.P)]
+                else:
+                    bufs = [fsi_object_send_and_local(
+                        arts[m], panels[m], workers[m], fabric, compute)
+                        for m in range(self.P)]
+                    bufs = [fsi_object_recv(arts[m], bufs[m], workers[m],
+                                            fabric, compute)
+                            for m in range(self.P)]
+            else:
+                if channel == "queue":
+                    fb = fsi_queue_send_and_local_fleet(
+                        arts, panels, workers, fabric, compute)
+                    bufs = fsi_queue_recv_fleet(arts, fb, workers, fabric,
+                                                compute)
+                else:
+                    fb = fsi_object_send_and_local_fleet(
+                        arts, panels, workers, fabric, compute)
+                    bufs = fsi_object_recv_fleet(arts, fb, workers, fabric,
+                                                 compute)
+            results[mode] = ([b.copy() for b in bufs],
+                             self._snap(workers, fabric))
+        bufs_a, snap_a = results["perworker"]
+        bufs_b, snap_b = results["fleet"]
+        for a, b in zip(bufs_a, bufs_b):
+            np.testing.assert_array_equal(a, b)
+        assert snap_a == snap_b
+
+
+class TestEndToEndBillingInvariance:
+    @pytest.fixture(scope="class")
+    def case(self):
+        net = make_sparse_dnn(256, n_layers=8, seed=0)
+        x0 = make_inputs(256, 24, seed=1)
+        return net, x0, dense_inference(net, x0)
+
+    @pytest.mark.parametrize("channel", ["queue", "object"])
+    def test_run_fsi_bit_identical(self, case, channel):
+        net, x0, oracle = case
+        a = run_fsi(net, x0, P=5, channel=channel, memory_mb=4000,
+                    channel_batching=False)
+        b = run_fsi(net, x0, P=5, channel=channel, memory_mb=4000,
+                    channel_batching=True)
+        np.testing.assert_array_equal(a.output, b.output)
+        np.testing.assert_allclose(b.output, oracle, rtol=1e-4, atol=1e-4)
+        # clocks and billing must be EXACT — the batched path changes host
+        # execution only, never the simulated algorithm
+        np.testing.assert_array_equal(a.worker_times, b.worker_times)
+        assert a.cost.total == b.cost.total
+        assert a.raw_exchange_bytes == b.raw_exchange_bytes
+        assert a.wire_exchange_bytes == b.wire_exchange_bytes
+        assert vars(a.stats) == vars(b.stats)
+        assert a.metrics == b.metrics
+
+    @pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+    def test_run_fsi_bit_identical_sharded_fused(self, case):
+        """The full fused stack (megakernel dispatch + batched channels) vs
+        the PR 3 semantics (vmap dispatch + per-worker channels): outputs
+        bitwise, billing bit-identical."""
+        from repro.core.backends import PallasBsrShardedBackend
+        from repro.launch.mesh import make_worker_mesh
+
+        net, x0, oracle = case
+        mesh = make_worker_mesh()
+        a = run_fsi(net, x0, P=6, channel="queue", memory_mb=4000,
+                    compute_backend=PallasBsrShardedBackend(
+                        mesh=mesh, dispatch="vmap"),
+                    mesh=mesh, channel_batching=False)
+        b = run_fsi(net, x0, P=6, channel="queue", memory_mb=4000,
+                    compute_backend="pallas-bsr-sharded", mesh=mesh,
+                    channel_batching=True)
+        np.testing.assert_array_equal(a.output, b.output)
+        np.testing.assert_allclose(b.output, oracle, rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(a.worker_times, b.worker_times)
+        assert a.cost.total == b.cost.total
+        assert vars(a.stats) == vars(b.stats)
