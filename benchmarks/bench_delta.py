@@ -27,6 +27,9 @@ from typing import Dict, List, Sequence
 
 # Billed-time rows tracked across PRs: deterministic given the latency/cost
 # model, so a >20% move is an algorithmic change, not machine noise.
+# The ``*_overlap_*`` rows gate the double-buffered pipeline's billed
+# per_sample_ms the same way; their ``wall_ms`` companion field is
+# deliberately NOT in TIMING_FIELDS (host wall-clock, machine-dependent).
 DEFAULT_ROWS = (
     "fsi_serial",
     "fsi_queue_P2",
@@ -35,6 +38,12 @@ DEFAULT_ROWS = (
     "fsi_object_P2",
     "fsi_object_P4",
     "fsi_object_P8",
+    "fsi_queue_overlap_P2",
+    "fsi_queue_overlap_P4",
+    "fsi_queue_overlap_P8",
+    "fsi_object_overlap_P2",
+    "fsi_object_overlap_P4",
+    "fsi_object_overlap_P8",
     "fsi_sharded_P64_N1024",
     "fsi_sharded_fused_P64_N1024",
 )

@@ -14,7 +14,14 @@ must fail CI instead of silently corrupting the trend.  Rules:
   field;
 * ``fsi_sharded_fused_*`` rows (the megakernel + batched-channel sweep) must
   carry a numeric ``wall_s``, and a row with a ``budget_s`` (the paper-scale
-  case) must carry numeric ``budget_s`` and boolean ``within_budget``.
+  case) must carry numeric ``budget_s`` and boolean ``within_budget``;
+* ``wall_ms`` (host wall-clock alongside the billed timing), when present,
+  must be numeric — it is never gated by bench_delta (machine-dependent),
+  but a corrupt value would still poison the trajectory artifact;
+* ``fsi_*_overlap_*`` rows (the double-buffered pipeline sweep) must carry
+  numeric ``per_sample_ms`` AND ``phased_per_sample_ms`` plus a boolean
+  ``counters_identical`` — the differential-oracle bit asserting charge
+  counts match the phased path exactly.
 
 Usage::
 
@@ -74,6 +81,21 @@ def validate(payload) -> List[str]:
                 problems.append(
                     f"{where} ({name}): fused sweep row without numeric "
                     f"'wall_s'")
+        if "wall_ms" in row:
+            wms = row["wall_ms"]
+            if not isinstance(wms, (int, float)) or isinstance(wms, bool):
+                problems.append(
+                    f"{where} ({name}): non-numeric wall_ms={wms!r}")
+        if name.startswith("fsi_") and "_overlap_" in name:
+            ph = row.get("phased_per_sample_ms")
+            if not isinstance(ph, (int, float)) or isinstance(ph, bool):
+                problems.append(
+                    f"{where} ({name}): overlap row without numeric "
+                    f"'phased_per_sample_ms'")
+            if not isinstance(row.get("counters_identical"), bool):
+                problems.append(
+                    f"{where} ({name}): overlap row without boolean "
+                    f"'counters_identical'")
         if "budget_s" in row:
             budget = row["budget_s"]
             if not isinstance(budget, (int, float)) or isinstance(budget, bool):

@@ -260,20 +260,27 @@ def _collect_entries(
     return entries, raw_total
 
 
-def _queue_publish_entries(
-    entries: List[Tuple[int, Chunk]], worker: WorkerState, fabric: QueueFabric,
-    compute: ComputeModel, raw_total: int, send_threads: int,
-) -> None:
-    """Charge the pack time, batch the entries (≤10 messages and ≤256KB per
-    publish), and publish round-robin over ``send_threads`` lanes."""
-    worker.charge_seconds(raw_total / compute.pack_bandwidth * worker.slowdown)
+def _charge_pack_event(worker: WorkerState, compute: ComputeModel,
+                       raw_total: int) -> None:
+    """Pack/serialize event: compute-side on both clock models (the payload
+    must exist before any lane can send it)."""
+    pack_s = raw_total / compute.pack_bandwidth * worker.slowdown
+    worker.charge_seconds(pack_s)
+    if worker.ledger is not None:
+        worker.ledger.compute(pack_s)
+
+
+def _batch_publish_entries(
+    entries: List[Tuple[int, Chunk]], pricing,
+) -> List[List[Tuple[int, Chunk]]]:
+    """Greedy batching under the SNS caps (≤10 messages, ≤256KB payload)."""
     batches: List[List[Tuple[int, Chunk]]] = []
     cur: List[Tuple[int, Chunk]] = []
     cur_bytes = 0
     for target, c in entries:
         if cur and (
-            len(cur) >= fabric.pricing.max_messages_per_publish
-            or cur_bytes + len(c) > fabric.pricing.max_publish_payload
+            len(cur) >= pricing.max_messages_per_publish
+            or cur_bytes + len(c) > pricing.max_publish_payload
         ):
             batches.append(cur)
             cur, cur_bytes = [], 0
@@ -281,11 +288,38 @@ def _queue_publish_entries(
         cur_bytes += len(c)
     if cur:
         batches.append(cur)
+    return batches
+
+
+def _queue_publish_entries(
+    entries: List[Tuple[int, Chunk]], worker: WorkerState, fabric: QueueFabric,
+    compute: ComputeModel, raw_total: int, send_threads: int,
+) -> None:
+    """The layer send as two schedulable events: the pack event (compute
+    timeline), then one aggregated publish event — ALL of the worker's
+    per-peer entries batched under the SNS caps and issued round-robin over
+    ``send_threads`` lanes in a single fabric interaction (one publish API
+    call per ≤10-message batch, not one per destination peer).
+
+    On the overlapped ledger the publish occupies the channel timeline,
+    gated on the pack completion; the subsequent local MVP then runs on the
+    compute timeline concurrently with the in-flight lanes."""
+    _charge_pack_event(worker, compute, raw_total)
+    batches = _batch_publish_entries(entries, fabric.pricing)
     if batches:
-        lane_time = fabric.publish_batches(
-            topic=worker.rank % fabric.n_topics, batches=batches,
-            at_time=worker.abs_time, lanes=send_threads,
-        )
+        led = worker.ledger
+        if led is None:
+            lane_time = fabric.publish_batches(
+                topic=worker.rank % fabric.n_topics, batches=batches,
+                at_time=worker.abs_time, lanes=send_threads,
+            )
+        else:
+            lane_time, led_lanes = fabric.publish_batches(
+                topic=worker.rank % fabric.n_topics, batches=batches,
+                at_time=worker.abs_time, lanes=send_threads,
+                ledger_at=max(led.t_channel, led.t_compute),
+            )
+            led.t_channel = max(led_lanes)
         worker.messages_sent += sum(len(b) for b in batches)
         worker.bytes_sent += sum(len(c) for b in batches for _, c in b)
         worker.advance_to_abs(max(lane_time))
@@ -297,17 +331,35 @@ def _object_put_targets(
     fabric: ObjectFabric, compute: ComputeModel, io_threads: int,
 ) -> None:
     """One object (or 0-byte ``.nul`` marker) per target, round-robin over
-    ``io_threads`` connections, then the pack-time charge."""
+    ``io_threads`` connections, then the pack-time charge.
+
+    Event split mirrors the queue path: on the overlapped ledger the pack is
+    a compute event and the PUT schedule occupies the channel timeline gated
+    on it (phased billing keeps its original charge order — the totals are
+    order-independent)."""
     target_blobs = [(t, chunks if chunks else []) for t, chunks in packed]
-    lane_time = fabric.put_multiparts(
-        art.layer, rank, target_blobs, worker.abs_time, lanes=io_threads
-    )
+    raw_total = sum(c.raw_bytes for _, chunks in target_blobs for c in chunks)
+    led = worker.ledger
+    if led is None:
+        lane_time = fabric.put_multiparts(
+            art.layer, rank, target_blobs, worker.abs_time, lanes=io_threads
+        )
+        worker.charge_seconds(raw_total / compute.pack_bandwidth * worker.slowdown)
+    else:
+        # ledger: pack first (the PUT needs its payload), then the lanes
+        pack_s = raw_total / compute.pack_bandwidth * worker.slowdown
+        led.compute(pack_s)
+        lane_time, led_lanes = fabric.put_multiparts(
+            art.layer, rank, target_blobs, worker.abs_time, lanes=io_threads,
+            ledger_at=max(led.t_channel, led.t_compute),
+        )
+        if target_blobs:
+            led.t_channel = max(led_lanes)
+        worker.charge_seconds(pack_s)
     worker.messages_sent += len(target_blobs)
     worker.bytes_sent += sum(
         len(c) for _, chunks in target_blobs for c in chunks
     )
-    raw_total = sum(c.raw_bytes for _, chunks in target_blobs for c in chunks)
-    worker.charge_seconds(raw_total / compute.pack_bandwidth * worker.slowdown)
     if target_blobs:
         worker.advance_to_abs(max(lane_time))
 
@@ -434,6 +486,9 @@ def charge_finish(
     modeled Lambda's, identical across compute backends by construction.
     """
     batch = x_buf.shape[1]
+    if worker.ledger is not None:
+        # dependency edge: the remote-contribution MVP needs the drain done
+        worker.ledger.join_compute()
     worker.charge_compute(art.remote_flops * batch, compute)
     worker.charge_compute(3.0 * x_out.size, compute)
     worker.touch_memory((x_buf.nbytes + x_out.nbytes) + art.W_local.nnz * 8)
@@ -478,7 +533,15 @@ def _queue_drain_one(
         receipts = []
         for d in deliveries:
             layer, src, rows, vals, seq, total = decode_chunk(bytes(d.blob))
-            worker.charge_seconds(len(d.blob) / compute.unpack_bandwidth * worker.slowdown)
+            unpack_s = len(d.blob) / compute.unpack_bandwidth * worker.slowdown
+            worker.charge_seconds(unpack_s)
+            if worker.ledger is not None:
+                # receiver thread: the chunk is in hand at its service-side
+                # availability on the sender's ledger; only the decode cost
+                # occupies the channel timeline (deletes are fire-and-forget
+                # trailing work, off the critical path)
+                avail = d.ledger_at if d.ledger_at is not None else d.deliver_at
+                worker.ledger.receive(avail, unpack_s)
             worker.messages_received += 1
             worker.bytes_received += len(d.blob)
             receipts.append(d.receipt)
@@ -648,13 +711,27 @@ def _object_drain_one(
             if h.src not in expect:
                 continue  # line 16: already received / not awaited — no GET
             seen.add(h.key)
+            led_avail = (h.ledger_visible_at if h.ledger_visible_at is not None
+                         else h.visible_at)
             if h.is_nul:
+                if worker.ledger is not None:
+                    # the reader must still observe the marker appear
+                    worker.ledger.receive(led_avail, 0.0)
                 del expect[h.src]  # line 13-14: retire source, never read
                 progress = True
                 continue
             now, blob = fabric.get_obj(art.layer, worker.rank, h.key, worker.abs_time)
             worker.advance_to_abs(now)
-            worker.charge_seconds(len(blob) / compute.unpack_bandwidth * worker.slowdown)
+            unpack_s = len(blob) / compute.unpack_bandwidth * worker.slowdown
+            worker.charge_seconds(unpack_s)
+            if worker.ledger is not None:
+                # reader thread: GET stream + decode, gated on the object's
+                # ledger visibility (LIST polling is folded into the blocked
+                # reader loop, like the queue path's long poll)
+                worker.ledger.receive(
+                    led_avail,
+                    fabric.get_first_byte + h.size / fabric.bandwidth + unpack_s,
+                )
             worker.messages_received += 1
             worker.bytes_received += len(blob)
             for part in ObjectFabric.split_multipart(bytes(blob)):

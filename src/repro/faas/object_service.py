@@ -17,7 +17,7 @@ Per the paper (Fig. 3):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.faas.payload import Chunk
 
@@ -41,6 +41,10 @@ class ObjectHandle:
     visible_at: float
     is_nul: bool
     src: int
+    # Visibility under the overlapped-pipeline ledger (sender's channel
+    # timeline + PUT latency + streaming).  None when the writer carried no
+    # ledger; drains then fall back to ``visible_at``.
+    ledger_visible_at: Optional[float] = None
 
 
 class ObjectFabric:
@@ -67,16 +71,24 @@ class ObjectFabric:
         return (target % self.n_buckets, layer, target)
 
     def put_obj(
-        self, layer: int, src: int, target: int, blob: Chunk | None, at_time: float
+        self, layer: int, src: int, target: int, blob: Chunk | None, at_time: float,
+        *, ledger_at: Optional[float] = None,
     ) -> float:
-        """PUT one object (or the 0-byte .nul marker); returns completion time."""
+        """PUT one object (or the 0-byte .nul marker); returns completion time.
+
+        ``ledger_at`` is the PUT start on the overlapped-pipeline timeline; it
+        only stamps the handle's ``ledger_visible_at`` and never affects
+        billing or the phased visibility schedule."""
         self.metrics.puts += 1
         is_nul = blob is None or len(blob) == 0
         size = 0 if is_nul else len(blob)
         done = at_time + self.put_latency + size / self.bandwidth
+        led_done = (None if ledger_at is None
+                    else ledger_at + self.put_latency + size / self.bandwidth)
         ext = "nul" if is_nul else "dat"
         key = f"{src}_{target}.{ext}"
-        handle = ObjectHandle(key=key, size=size, visible_at=done, is_nul=is_nul, src=src)
+        handle = ObjectHandle(key=key, size=size, visible_at=done, is_nul=is_nul,
+                              src=src, ledger_visible_at=led_done)
         self._store.setdefault(self._prefix(layer, target), {})[key] = (
             handle,
             blob if blob is not None else Chunk(b"", 0),
@@ -89,37 +101,61 @@ class ObjectFabric:
         return done
 
     def put_multipart(
-        self, layer: int, src: int, target: int, blobs: List[Chunk], at_time: float
+        self, layer: int, src: int, target: int, blobs: List[Chunk], at_time: float,
+        *, ledger_at: Optional[float] = None,
     ) -> float:
         """Large sends: object storage allows effectively unlimited object
         size, so multiple chunks to one target become one object (paper:
         'each FaaS instance only needs to write a single object for each of
         its targets in a given layer')."""
         if not blobs:
-            return self.put_obj(layer, src, target, None, at_time)
+            if ledger_at is None:
+                return self.put_obj(layer, src, target, None, at_time)
+            return self.put_obj(layer, src, target, None, at_time,
+                                ledger_at=ledger_at)
         joined = b"".join(
             len(b).to_bytes(8, "little") + bytes(b) for b in blobs
         )
         chunk = Chunk(joined, raw_bytes=sum(b.raw_bytes for b in blobs))
-        return self.put_obj(layer, src, target, chunk, at_time)
+        if ledger_at is None:
+            return self.put_obj(layer, src, target, chunk, at_time)
+        return self.put_obj(layer, src, target, chunk, at_time,
+                            ledger_at=ledger_at)
 
     def put_multiparts(
         self, layer: int, src: int,
         target_blobs: List[Tuple[int, List[Chunk]]], at_time: float,
         lanes: int = 8,
-    ) -> List[float]:
+        *, ledger_at: Optional[float] = None,
+    ):
         """PUT one multipart object (or ``.nul``) per (target, chunks) pair,
         round-robin over ``lanes`` concurrent connections starting at
         ``at_time``; returns the per-lane completion times.  Billing is
         exactly one ``put_multipart`` per target — the one-call entry point
-        the fleet send path uses for a layer's whole PUT schedule."""
+        the fleet send path uses for a layer's whole PUT schedule.
+
+        With ``ledger_at`` set, the same lane schedule is mirrored on the
+        overlapped timeline (identical ``i % lanes`` assignment) and the
+        return is ``(lane_time, ledger_lane_time)``."""
         lane_time = [at_time] * max(1, lanes)
+        led_lanes = None if ledger_at is None else [ledger_at] * len(lane_time)
         for i, (target, blobs) in enumerate(target_blobs):
             lane = i % len(lane_time)
-            lane_time[lane] = self.put_multipart(
-                layer, src, target, blobs, lane_time[lane]
-            )
-        return lane_time
+            if led_lanes is None:
+                lane_time[lane] = self.put_multipart(
+                    layer, src, target, blobs, lane_time[lane]
+                )
+            else:
+                lane_time[lane] = self.put_multipart(
+                    layer, src, target, blobs, lane_time[lane],
+                    ledger_at=led_lanes[lane],
+                )
+                # mirror put_obj's duration arithmetic (length-prefixed join)
+                size = sum(len(b) + 8 for b in blobs) if blobs else 0
+                led_lanes[lane] += self.put_latency + size / self.bandwidth
+        if ledger_at is None:
+            return lane_time
+        return lane_time, led_lanes
 
     @staticmethod
     def split_multipart(blob: bytes) -> List[bytes]:

@@ -40,6 +40,10 @@ class Delivery:
     blob: Chunk
     attributes: Dict[str, int]
     receipt: int = -1
+    # Availability under the overlapped-pipeline ledger (sender's channel
+    # timeline + fan-out).  None when the sender carried no ledger; drains
+    # then fall back to ``deliver_at``.
+    ledger_at: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -84,13 +88,18 @@ class QueueFabric:
     # -- producer side ------------------------------------------------------
 
     def publish_batch(
-        self, topic: int, entries: List[Tuple[int, Chunk]], at_time: float
+        self, topic: int, entries: List[Tuple[int, Chunk]], at_time: float,
+        *, ledger_at: Optional[float] = None,
     ) -> float:
         """Publish ≤10 (target, blob) entries; returns completion time.
 
         Billing: one publish request per 64KB increment of the total payload
         (a 256KB batch = 4 billed units).  Data transfer SNS→SQS is billed
         per byte (Z).
+
+        ``ledger_at`` is the send start on the overlapped-pipeline timeline;
+        it only stamps each delivery's ``ledger_at`` availability and never
+        affects billing or the phased delivery schedule.
         """
         if not (1 <= len(entries) <= self.pricing.max_messages_per_publish):
             raise ValueError("publish batch must contain 1..10 messages")
@@ -107,6 +116,8 @@ class QueueFabric:
         self.metrics.bytes_sns_to_sqs += payload
         self.metrics.raw_bytes += sum(b.raw_bytes for _, b in entries)
         done = at_time + self.publish_latency
+        led_avail = (None if ledger_at is None
+                     else ledger_at + self.publish_latency + self.fanout_latency)
         for target, blob in entries:
             if not (0 <= target < self.n_workers):
                 raise ValueError(f"bad filter target {target}")
@@ -114,7 +125,8 @@ class QueueFabric:
                 self._queues[target],
                 # heap keyed by delivery time; receipt id breaks ties
                 _OrderedDelivery(
-                    done + self.fanout_latency, self._next_receipt(), target, blob
+                    done + self.fanout_latency, self._next_receipt(), target,
+                    blob, ledger_at=led_avail,
                 ),
             )
         return done
@@ -122,17 +134,32 @@ class QueueFabric:
     def publish_batches(
         self, topic: int, batches: List[List[Tuple[int, Chunk]]],
         at_time: float, lanes: int = 8,
-    ) -> List[float]:
+        *, ledger_at: Optional[float] = None,
+    ):
         """Publish a sequence of batches round-robin over ``lanes`` concurrent
         connections starting at ``at_time``; returns the per-lane completion
         times.  Billing is exactly ``len(batches)`` ``publish_batch`` calls —
         this is the one-call entry point the fleet send path uses so a layer's
-        whole publish schedule is a single fabric interaction."""
+        whole publish schedule is a single fabric interaction.
+
+        With ``ledger_at`` set, the same lane schedule is mirrored on the
+        overlapped timeline starting at ``ledger_at`` (identical assignment
+        ``i % lanes``), and the return is ``(lane_time, ledger_lane_time)``.
+        """
         lane_time = [at_time] * max(1, lanes)
+        led_lanes = None if ledger_at is None else [ledger_at] * len(lane_time)
         for i, batch in enumerate(batches):
             lane = i % len(lane_time)
-            lane_time[lane] = self.publish_batch(topic, batch, lane_time[lane])
-        return lane_time
+            if led_lanes is None:
+                lane_time[lane] = self.publish_batch(topic, batch, lane_time[lane])
+            else:
+                lane_time[lane] = self.publish_batch(
+                    topic, batch, lane_time[lane], ledger_at=led_lanes[lane]
+                )
+                led_lanes[lane] += self.publish_latency
+        if ledger_at is None:
+            return lane_time
+        return lane_time, led_lanes
 
     def _next_receipt(self) -> int:
         self._receipt += 1
@@ -198,6 +225,7 @@ class _OrderedDelivery:
     receipt: int
     target: int = dataclasses.field(compare=False)
     blob: Chunk = dataclasses.field(compare=False)
+    ledger_at: Optional[float] = dataclasses.field(compare=False, default=None)
 
     def as_delivery(self) -> Delivery:
         return Delivery(
@@ -206,4 +234,5 @@ class _OrderedDelivery:
             blob=self.blob,
             attributes={},
             receipt=self.receipt,
+            ledger_at=self.ledger_at,
         )

@@ -1,13 +1,83 @@
-"""Per-worker state for the simulated Lambda fleet."""
+"""Per-worker state for the simulated Lambda fleet.
+
+Two clock models live here:
+
+* the **phased clock** (``WorkerState.clock``) — the strict-sum model every
+  fabric interaction is driven by: each layer's pack → publish → local MVP →
+  drain → finish charges accumulate serially.  This clock decides *when*
+  messages are published and polled, so every billable count (publish units,
+  SQS calls, S3 requests, wire bytes) derives from it alone;
+* the **event ledger** (``EventLedger``) — the overlapped-pipeline model:
+  separate compute and channel timelines per worker, merged only at true
+  dependency edges (a publish needs its payload packed; a layer finish needs
+  the drain complete).  The ledger never touches the fabric — it re-times
+  the exact events the phased clock executed — so switching the reported
+  timeline between the two models cannot change a single charge count.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
-__all__ = ["WorkerState", "ComputeModel", "estimate_worker_memory_bytes"]
+__all__ = ["WorkerState", "EventLedger", "ComputeModel",
+           "estimate_worker_memory_bytes"]
+
+
+@dataclasses.dataclass
+class EventLedger:
+    """Dual-timeline event ledger for the overlapped layer pipeline.
+
+    ``t_compute`` carries pack, SpMM, and epilogue work; ``t_channel``
+    carries publish lane occupancy and the receiver thread's unpack work.
+    Both are *absolute* seconds (same epoch as ``WorkerState.abs_time``) and
+    monotone by construction — every mutator takes ``max`` with the current
+    value before adding, so a dependency edge can only delay an event, never
+    rewind a timeline.
+    """
+
+    t_compute: float = 0.0
+    t_channel: float = 0.0
+
+    @property
+    def done(self) -> float:
+        """The worker is finished when both timelines drain."""
+        return max(self.t_compute, self.t_channel)
+
+    def compute(self, seconds: float) -> None:
+        self.t_compute += seconds
+
+    def channel_busy_from(self, ready: float, seconds: float) -> float:
+        """Occupy the channel timeline with a send that cannot start before
+        ``ready`` (its payload's pack completion); returns the finish time."""
+        self.t_channel = max(self.t_channel, ready) + seconds
+        return self.t_channel
+
+    def receive(self, available_at: float, seconds: float) -> None:
+        """Receiver-thread work on a chunk that became available (service
+        side) at ``available_at``: the thread is blocked in a long poll /
+        LIST loop, so the data is in hand at availability and only the
+        deserialize/stream cost occupies the channel timeline."""
+        self.t_channel = max(self.t_channel, available_at) + seconds
+
+    def join_compute(self) -> None:
+        """Dependency edge channel → compute (e.g. a layer finish needs the
+        drain complete): compute may not proceed past the channel timeline."""
+        self.t_compute = max(self.t_compute, self.t_channel)
+
+    def sync(self, seconds: float) -> None:
+        """A fleet-wide stall that occupies the whole worker (cold start,
+        weight reload on re-invoke): both timelines meet, then advance."""
+        t = self.done + seconds
+        self.t_compute = t
+        self.t_channel = t
+
+    def sync_to(self, t_abs: float) -> None:
+        """Advance both timelines to an absolute release time (collectives)."""
+        self.t_compute = max(self.t_compute, t_abs)
+        self.t_channel = max(self.t_channel, t_abs)
 
 
 @dataclasses.dataclass
@@ -45,17 +115,29 @@ class WorkerState:
     messages_sent: int = 0
     messages_received: int = 0
     mem_high_water: int = 0
+    # Overlapped-pipeline timelines; None outside run_fsi (unit tests that
+    # drive helpers directly get the phased clock only).
+    ledger: Optional[EventLedger] = None
 
     @property
     def abs_time(self) -> float:
         return self.start_time + self.clock
+
+    @property
+    def overlap_time(self) -> float:
+        """Absolute finish time under the overlapped model (falls back to the
+        phased clock when no ledger is attached)."""
+        return self.ledger.done if self.ledger is not None else self.abs_time
 
     def advance_to_abs(self, t_abs: float) -> None:
         self.clock = max(self.clock, t_abs - self.start_time)
 
     def charge_compute(self, flops: float, model: ComputeModel) -> None:
         self.flops += flops
-        self.clock += model.flops_seconds(flops, self.memory_mb) * self.slowdown
+        s = model.flops_seconds(flops, self.memory_mb) * self.slowdown
+        self.clock += s
+        if self.ledger is not None:
+            self.ledger.compute(s)
 
     def charge_seconds(self, s: float) -> None:
         self.clock += s

@@ -247,7 +247,8 @@ from repro.core.send_recv import build_comm_plans
 from repro.data.graphchallenge import dense_inference, make_inputs, make_sparse_dnn
 from repro.faas.object_service import ObjectFabric
 from repro.faas.queue_service import QueueFabric
-from repro.faas.worker import ComputeModel, WorkerState
+from repro.faas.simulator import LatencyModel, run_fsi
+from repro.faas.worker import ComputeModel, EventLedger, WorkerState
 
 # tiny cap forces multi-chunk sends so chunk ordering/duplication matters
 SMALL_PRICING = dataclasses.replace(AWS_PRICING, max_publish_payload=1600)
@@ -257,9 +258,12 @@ class DuplicatingQueueFabric(QueueFabric):
     """At-least-once SQS: every published message is delivered twice, the
     duplicate arriving later (visibility-timeout style redelivery)."""
 
-    def publish_batch(self, topic, entries, at_time):
-        done = super().publish_batch(topic, entries, at_time)
-        return super().publish_batch(topic, entries, done + 0.5)
+    def publish_batch(self, topic, entries, at_time, *, ledger_at=None):
+        done = super().publish_batch(topic, entries, at_time,
+                                     ledger_at=ledger_at)
+        dup_led = None if ledger_at is None else ledger_at + 0.5
+        return super().publish_batch(topic, entries, done + 0.5,
+                                     ledger_at=dup_led)
 
 
 class ReorderingQueueFabric(QueueFabric):
@@ -279,9 +283,12 @@ class DuplicatingObjectFabric(ObjectFabric):
     """Every object is PUT twice (idempotent overwrite of the same key) and
     LISTed twice (eventual-consistency style duplicate listing)."""
 
-    def put_obj(self, layer, src, target, blob, at_time):
-        done = super().put_obj(layer, src, target, blob, at_time)
-        return super().put_obj(layer, src, target, blob, done)
+    def put_obj(self, layer, src, target, blob, at_time, *, ledger_at=None):
+        done = super().put_obj(layer, src, target, blob, at_time,
+                               ledger_at=ledger_at)
+        dup_led = None if ledger_at is None else ledger_at + 0.5
+        return super().put_obj(layer, src, target, blob, done,
+                               ledger_at=dup_led)
 
     def list_files(self, layer, worker, at_time):
         now, handles = super().list_files(layer, worker, at_time)
@@ -292,9 +299,11 @@ class ReorderingObjectFabric(ObjectFabric):
     """LIST returns handles in reverse key order and multipart objects carry
     their chunks in reverse arrival order."""
 
-    def put_multipart(self, layer, src, target, blobs, at_time):
+    def put_multipart(self, layer, src, target, blobs, at_time, *,
+                      ledger_at=None):
         return super().put_multipart(layer, src, target,
-                                     list(reversed(blobs)), at_time)
+                                     list(reversed(blobs)), at_time,
+                                     ledger_at=ledger_at)
 
     def list_files(self, layer, worker, at_time):
         now, handles = super().list_files(layer, worker, at_time)
@@ -331,10 +340,13 @@ class TestChannelFailurePaths:
         artifacts = prepare_worker_artifacts(net.layers, partition, plans)
         return net, x0, artifacts, dense_inference(net, x0)
 
-    def _run(self, case, channel, fabric, drain="perworker"):
+    def _run(self, case, channel, fabric, drain="perworker", ledger=False):
         net, x0, artifacts, _ = case
         compute = ComputeModel()
-        workers = [WorkerState(rank=m, memory_mb=2000) for m in range(self.P)]
+        workers = [WorkerState(rank=m, memory_mb=2000,
+                               ledger=EventLedger() if ledger else None)
+                   for m in range(self.P)]
+        self._last_workers = workers
         panels = [x0[artifacts[m].x0_rows].astype(np.float32)
                   for m in range(self.P)]
         for k in range(net.n_layers):
@@ -448,3 +460,81 @@ class TestChannelFailurePaths:
         x_buf = fsi_queue_recv(art_single, x_buf, worker, fabric, compute)
         pos = np.searchsorted(art.needed_rows, rows)
         np.testing.assert_array_equal(x_buf[pos], vals)
+
+    # ---- overlapped-ledger coverage (drains interleaved with compute) ------
+
+    @pytest.mark.parametrize("drain", ["perworker", "fleet"])
+    @pytest.mark.parametrize("fault", sorted(QUEUE_FAULTS))
+    def test_queue_faults_under_overlap_ledger(self, case, fault, drain):
+        """Same fault fabrics with event-ledger workers: the (src, seq)
+        dedupe must stay exact when the ledger re-times drains against
+        in-flight sends, and the ledger timelines must come out sane (a
+        redelivered stale chunk may only push the channel timeline forward,
+        never unwind it)."""
+        fabric = QUEUE_FAULTS[fault](self.P, pricing=SMALL_PRICING)
+        out = self._run(case, "queue", fabric, drain=drain, ledger=True)
+        np.testing.assert_allclose(out, case[3], rtol=1e-4, atol=1e-4)
+        for w in self._last_workers:
+            assert w.ledger.t_compute >= 0.0 and w.ledger.t_channel >= 0.0
+            # overlapping can only remove serialization, never add work
+            assert w.ledger.done <= w.abs_time + 1e-9
+
+    @pytest.mark.parametrize("fault", sorted(OBJECT_FAULTS))
+    def test_object_faults_under_overlap_ledger(self, case, fault):
+        fabric = OBJECT_FAULTS[fault](self.P)
+        out = self._run(case, "object", fabric, drain="fleet", ledger=True)
+        np.testing.assert_allclose(out, case[3], rtol=1e-4, atol=1e-4)
+
+    def test_queue_fault_billing_unchanged_by_ledger(self, case):
+        """Attaching ledgers must not change a single fabric counter — the
+        ledger is pure arithmetic riding along the phased schedule."""
+        results = {}
+        for with_ledger in (False, True):
+            fabric = DuplicatingReorderingQueueFabric(
+                self.P, pricing=SMALL_PRICING)
+            out = self._run(case, "queue", fabric, drain="fleet",
+                            ledger=with_ledger)
+            results[with_ledger] = (out, dict(vars(fabric.metrics)))
+        np.testing.assert_array_equal(results[False][0], results[True][0])
+        assert results[False][1] == results[True][1]
+
+
+class TestStragglersUnderOverlap:
+    """Straggler slowdown + re-invoke must work when the reported clocks come
+    from the overlapped ledger: charge counts stay bit-identical to the
+    phased oracle and the output still matches the dense reference."""
+
+    def _case(self):
+        net = make_sparse_dnn(128, n_layers=4, seed=7)
+        x0 = make_inputs(128, 16, seed=8)
+        return net, x0, dense_inference(net, x0)
+
+    def test_reinvoke_stragglers_overlap_vs_phased(self):
+        net, x0, oracle = self._case()
+        lat = LatencyModel(straggler_prob=0.5, straggler_slowdown=6.0)
+        runs = {
+            ov: run_fsi(net, x0, P=4, channel="queue", memory_mb=3000,
+                        latency=lat, reinvoke_stragglers=True,
+                        straggler_timeout=2.0, overlap=ov)
+            for ov in (True, False)
+        }
+        a, b = runs[True], runs[False]
+        np.testing.assert_allclose(a.output, oracle, rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(a.output, b.output)
+        assert vars(a.stats).keys() == vars(b.stats).keys()
+        for f, va in vars(a.stats).items():
+            if f == "mean_runtime_s":
+                continue  # durations legitimately differ between clock models
+            assert va == vars(b.stats)[f], f
+        assert a.metrics == b.metrics
+        assert a.makespan <= b.makespan + 1e-12
+
+    def test_straggler_slowdown_dilates_overlap_makespan(self):
+        # at this scale a layer's compute is ~µs against ~40ms channel hops,
+        # so the slowdown must be extreme before it can dominate the ledger
+        net, x0, _ = self._case()
+        base = run_fsi(net, x0, P=4, channel="queue", memory_mb=3000)
+        lat = LatencyModel(straggler_prob=0.9, straggler_slowdown=5e4)
+        slow = run_fsi(net, x0, P=4, channel="queue", memory_mb=3000,
+                       latency=lat)
+        assert slow.makespan > base.makespan

@@ -1,0 +1,220 @@
+"""Overlapped layer pipeline: event-ledger invariants + billing invariance.
+
+The tentpole contract of the double-buffered ``run_fsi`` pipeline:
+
+* the event ledger's per-worker timelines are monotone (a dependency edge
+  can delay an event, never rewind a clock);
+* ``overlap=True`` makespan ≤ phased makespan on every channel × P (the
+  ledger removes serialization, it never adds work);
+* every charge COUNT — publish units, publish/SQS API calls, S3
+  puts/gets/lists, message counts, raw/wire bytes — is bit-identical
+  between ``overlap=True`` and ``overlap=False``, because the phased clock
+  alone drives every fabric interaction and the ledger is pure arithmetic
+  riding along;
+* FMI-style aggregation: a worker's per-layer sends and each collective
+  sweep step cost O(1) publish API calls, not O(out-degree).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.fsi import (
+    fsi_queue_send_and_local_fleet,
+    prepare_worker_artifacts,
+)
+from repro.core.partitioner import partition_network
+from repro.core.send_recv import build_comm_plans
+from repro.data.graphchallenge import dense_inference, make_inputs, make_sparse_dnn
+from repro.faas.collectives import barrier, reduce_to_root
+from repro.faas.launch_tree import TreeSpec
+from repro.faas.object_service import ObjectFabric
+from repro.faas.queue_service import QueueFabric
+from repro.faas.simulator import run_fsi
+from repro.faas.worker import ComputeModel, EventLedger, WorkerState
+
+COUNT_STATS = ("P", "memory_mb", "publish_units", "bytes_sns_to_sqs",
+               "sqs_api_calls", "s3_puts", "s3_gets", "s3_lists")
+
+
+class TestEventLedger:
+    def test_monotone_under_all_mutators(self):
+        led = EventLedger(t_compute=1.0, t_channel=1.0)
+        prev = (led.t_compute, led.t_channel)
+
+        def check():
+            nonlocal prev
+            assert led.t_compute >= prev[0] and led.t_channel >= prev[1]
+            prev = (led.t_compute, led.t_channel)
+
+        led.compute(0.5); check()
+        led.channel_busy_from(0.2, 0.1); check()   # ready in the past: no rewind
+        led.channel_busy_from(9.0, 0.1); check()   # gated on a later dependency
+        led.receive(0.0, 0.0); check()             # stale arrival: no rewind
+        led.receive(20.0, 0.3); check()
+        led.join_compute(); check()
+        assert led.t_compute == led.t_channel == 20.3
+        led.sync(0.7); check()
+        led.sync_to(5.0); check()                  # already past: no rewind
+        led.sync_to(50.0); check()
+        assert led.done == 50.0
+
+    def test_channel_gating_hides_publish_under_compute(self):
+        """The canonical overlap: compute proceeds while the channel lane is
+        busy, and the finish join only pays the later of the two."""
+        led = EventLedger()
+        led.compute(1.0)                       # pack
+        led.channel_busy_from(led.t_compute, 3.0)  # publish lanes
+        led.compute(2.0)                       # local MVP under the publish
+        assert led.t_compute == 3.0 and led.t_channel == 4.0
+        led.join_compute()
+        assert led.t_compute == 4.0            # not 1+3+2=6: overlap won 2s
+
+
+class TestRunFsiLedgerInvariants:
+    @pytest.fixture(scope="class")
+    def case(self):
+        net = make_sparse_dnn(256, n_layers=8, seed=0)
+        x0 = make_inputs(256, 24, seed=1)
+        return net, x0, dense_inference(net, x0)
+
+    @pytest.mark.parametrize("channel", ["queue", "object"])
+    @pytest.mark.parametrize("P", [2, 4, 8])
+    def test_overlap_vs_phased(self, case, channel, P):
+        net, x0, oracle = case
+        a = run_fsi(net, x0, P=P, channel=channel, memory_mb=4000, overlap=True)
+        b = run_fsi(net, x0, P=P, channel=channel, memory_mb=4000, overlap=False)
+        # same algorithm, same bytes, same answer
+        np.testing.assert_array_equal(a.output, b.output)
+        np.testing.assert_allclose(a.output, oracle, rtol=1e-4, atol=1e-4)
+        # charge counts bit-identical (durations are the only delta)
+        for f in COUNT_STATS:
+            assert getattr(a.stats, f) == getattr(b.stats, f), f
+        assert a.raw_exchange_bytes == b.raw_exchange_bytes
+        assert a.wire_exchange_bytes == b.wire_exchange_bytes
+        assert a.cost.communication == b.cost.communication
+        assert a.metrics == b.metrics
+        # overlap can only remove serialization
+        assert a.makespan <= b.makespan + 1e-12
+        np.testing.assert_array_compare(np.less_equal, a.worker_times,
+                                        b.worker_times + 1e-12)
+        # both makespans are reported identically from either run
+        assert a.metrics["overlap_makespan_s"] == a.makespan
+        assert b.metrics["phased_makespan_s"] == b.makespan
+        assert a.cost.total <= b.cost.total + 1e-12
+
+    def test_batching_invariance_holds_under_overlap(self, case):
+        """The PR 5 invariant extended: host-side fleet batching must not
+        move the LEDGER clocks either (both paths share the charge sites)."""
+        net, x0, _ = case
+        a = run_fsi(net, x0, P=5, channel="queue", memory_mb=4000,
+                    channel_batching=False, overlap=True)
+        b = run_fsi(net, x0, P=5, channel="queue", memory_mb=4000,
+                    channel_batching=True, overlap=True)
+        np.testing.assert_array_equal(a.worker_times, b.worker_times)
+        assert a.metrics == b.metrics
+        assert vars(a.stats) == vars(b.stats)
+
+
+class TestAggregatedSends:
+    """Acceptance: per-layer publish API calls are O(1) per worker, not
+    O(out-degree) — all of a worker's per-peer messages ride one batched
+    publish (entries ≤10 messages / ≤256KB)."""
+
+    def test_layer_send_one_publish_per_worker(self):
+        P = 8
+        net = make_sparse_dnn(256, n_layers=4, seed=3)
+        x0 = make_inputs(256, 8, seed=4)
+        partition = partition_network(net.layers, P, method="hgp", seed=0)
+        plans = build_comm_plans(net.layers, partition)
+        artifacts = prepare_worker_artifacts(net.layers, partition, plans)
+        compute = ComputeModel()
+        # pick the layer (k ≥ 1 so the input panel shape is known from the
+        # previous layer's out_rows) with the widest fan-out in the plan
+        k = max(range(1, net.n_layers),
+                key=lambda k: max(len(a.layers[k].send_global)
+                                  for a in artifacts))
+        arts = [a.layers[k] for a in artifacts]
+        out_degree = [len(a.send_global) for a in arts]
+        assert max(out_degree) > 1, "case must exercise multi-peer fan-out"
+        fabric = QueueFabric(P)
+        workers = [WorkerState(rank=m, memory_mb=2000) for m in range(P)]
+        # all-ones x^{k-1} panels (activation sparsity then drops nothing)
+        panels = [np.ones((len(a.layers[k - 1].out_rows), 8), np.float32)
+                  for a in artifacts]
+        fsi_queue_send_and_local_fleet(arts, panels, workers, fabric, compute)
+        senders = sum(1 for d in out_degree if d > 0)
+        # one publish API call per sending worker — NOT sum(out_degree)
+        assert fabric.metrics.publish_api_calls == senders
+        assert senders < sum(out_degree)
+
+
+class TestAggregatedCollectives:
+    def _fleet(self, P, t0=5.0):
+        return [WorkerState(rank=m, memory_mb=2000, clock=t0 - m * 0.1)
+                for m in range(P)]
+
+    def test_barrier_fewer_api_calls(self):
+        P = 9
+        tree = TreeSpec(n_workers=P, branching=4)
+        calls = {}
+        for agg in (False, True):
+            fabric = QueueFabric(P)
+            barrier(self._fleet(P), fabric, tree, aggregate=agg)
+            calls[agg] = (fabric.metrics.publish_api_calls,
+                          fabric.metrics.sqs_api_calls)
+        # down-sweep: one publish per parent instead of one per child;
+        # up-sweep: one poll+delete per parent instead of per edge
+        assert calls[True][0] < calls[False][0]
+        assert calls[True][1] < calls[False][1]
+
+    def test_barrier_object_fewer_lists(self):
+        P = 9
+        tree = TreeSpec(n_workers=P, branching=4)
+        lists = {}
+        for agg in (False, True):
+            fabric = ObjectFabric(P)
+            barrier(self._fleet(P), fabric, tree, aggregate=agg)
+            lists[agg] = fabric.metrics.lists
+        assert lists[True] < lists[False]  # one LIST per node, not per edge
+
+    def test_reduce_drain_side_aggregation(self):
+        """In a reduce up-sweep every edge has a distinct source, so the
+        publish count can't shrink — the aggregation win is on the receiver:
+        each parent drains its whole step with batched polls + ONE batched
+        delete instead of a poll + delete per edge.  Bytes and results are
+        identical — aggregation batches API calls, it does not change what
+        is sent."""
+        import dataclasses as _dc
+
+        from repro.core.cost_model import AWS_PRICING
+        small = _dc.replace(AWS_PRICING, max_publish_payload=1 << 10)
+        P = 5
+        tree = TreeSpec(n_workers=P, branching=2)
+        payloads = [np.full((64, 16), float(m), np.float32) for m in range(P)]
+        outs, calls = {}, {}
+        for agg in (False, True):
+            fabric = QueueFabric(P, pricing=small)
+            outs[agg] = reduce_to_root(self._fleet(P), fabric, tree,
+                                       [p.copy() for p in payloads],
+                                       op="sum", aggregate=agg)
+            calls[agg] = (fabric.metrics.publish_api_calls,
+                          fabric.metrics.sqs_api_calls,
+                          fabric.metrics.bytes_sns_to_sqs)
+        np.testing.assert_array_equal(outs[True], outs[False])
+        assert calls[True][0] == calls[False][0]  # same publishes
+        assert calls[True][2] == calls[False][2]  # same bytes
+        assert calls[True][1] < calls[False][1]   # fewer polls + deletes
+
+    def test_fused_sync_reduce_advances_all_workers(self):
+        """reduce_to_root(sync=True) doubles as the barrier: every worker's
+        clock lands at/after its subtree hand-off, and the root dominates."""
+        P = 7
+        tree = TreeSpec(n_workers=P, branching=2)
+        workers = self._fleet(P)
+        before = [w.abs_time for w in workers]
+        payloads = [np.full((4, 2), float(m), np.float32) for m in range(P)]
+        reduce_to_root(workers, QueueFabric(P), tree, payloads, op="sum",
+                       sync=True)
+        after = [w.abs_time for w in workers]
+        assert all(a >= b for a, b in zip(after, before))
+        assert max(after) == after[0]  # the root finishes last
