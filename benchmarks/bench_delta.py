@@ -12,6 +12,12 @@ A named row missing from the *baseline* is skipped (new row, no trend yet);
 missing from the *fresh* file it fails — a silently dropped benchmark is a
 broken trajectory.
 
+A baseline whose ``meta.schema_version`` is missing or older than
+``benchmarks.check_schema.SCHEMA_VERSION`` fails loudly (exit 2): a stale
+committed artifact would silently skip every row added since it was
+produced, which is exactly the silent-corruption mode this gate exists to
+prevent.  Regenerate it (``make bench-paper``) and commit the result.
+
 Usage::
 
     PYTHONPATH=src python -m benchmarks.bench_delta BASELINE.json FRESH.json \
@@ -25,11 +31,15 @@ import json
 import sys
 from typing import Dict, List, Sequence
 
+from benchmarks.check_schema import SCHEMA_VERSION
+
 # Billed-time rows tracked across PRs: deterministic given the latency/cost
 # model, so a >20% move is an algorithmic change, not machine noise.
 # The ``*_overlap_*`` rows gate the double-buffered pipeline's billed
 # per_sample_ms the same way; their ``wall_ms`` companion field is
 # deliberately NOT in TIMING_FIELDS (host wall-clock, machine-dependent).
+# The ``lm_pipeline_*`` rows gate the pipeline-parallel LM executor's billed
+# per_token_ms across both channels and stage counts.
 DEFAULT_ROWS = (
     "fsi_serial",
     "fsi_queue_P2",
@@ -46,9 +56,13 @@ DEFAULT_ROWS = (
     "fsi_object_overlap_P8",
     "fsi_sharded_P64_N1024",
     "fsi_sharded_fused_P64_N1024",
+    "lm_pipeline_queue_P2",
+    "lm_pipeline_queue_P4",
+    "lm_pipeline_object_P2",
+    "lm_pipeline_object_P4",
 )
 
-TIMING_FIELDS = ("per_sample_ms", "us_per_call")
+TIMING_FIELDS = ("per_sample_ms", "per_token_ms", "us_per_call")
 
 
 def _timing(row: dict):
@@ -105,6 +119,16 @@ def main(argv=None) -> int:
         except (OSError, json.JSONDecodeError) as e:
             print(f"{path}: unreadable ({e})", file=sys.stderr)
             return 2
+    base_version = payloads[0].get("meta", {}).get("schema_version", 0)
+    if not isinstance(base_version, int) or base_version < SCHEMA_VERSION:
+        print(
+            f"{args.baseline}: baseline schema_version="
+            f"{base_version or 'missing'} is older than the current schema "
+            f"v{SCHEMA_VERSION} — every row added since would be silently "
+            f"skipped. Regenerate the committed baseline (make bench-paper) "
+            f"and commit it.",
+            file=sys.stderr)
+        return 2
     rows = tuple(args.rows.split(",")) if args.rows else DEFAULT_ROWS
     problems = compare(payloads[0], payloads[1], rows=rows,
                        threshold=args.threshold)

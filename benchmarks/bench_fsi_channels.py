@@ -29,6 +29,13 @@ And the mesh-sharded paper-scale fleet path (PR 3, fused rows PR 5):
   densifies shards offline (``bsr_from_csr`` builds BSR straight from CSR
   block coordinates since PR 4).
 
+And the pipeline-parallel LM serving path (PR 7):
+
+* ``lm_pipeline_{queue,object}_P{2,4}`` rows decode a reduced model-zoo
+  config over the serverless stage pipeline (``run_lm_pipeline``) and track
+  billed ms/token, $ per 1K tokens, and the overlap-vs-phased
+  ``counters_identical`` differential-oracle bit.
+
 And the sequence-sharded decode path (PR 4):
 
 * ``decode_sharded_*`` rows time one split-KV decode step — shard-local
@@ -141,6 +148,71 @@ def bench_overlap(net, x0, oracle, workers=(2, 4, 8)) -> List[dict]:
                 counters_identical=bool(identical),
                 cost_usd=r_ov.cost.total,
                 comms_usd=r_ov.cost.communication,
+                wall_s=round(wall, 4), wall_ms=round(wall * 1e3, 2),
+            ))
+    return rows
+
+
+def bench_lm_pipeline(arch: str = "internlm2-1.8b", workers=(2, 4),
+                      batch: int = 2, prompt_len: int = 12,
+                      max_new: int = 4) -> List[dict]:
+    """Pipeline-parallel LM serving over the FaaS fabric (PR 7).
+
+    Each ``lm_pipeline_{channel}_P{P}`` row decodes a reduced model-zoo
+    config through ``run_lm_pipeline`` — the layer stack split into P stage
+    workers, activations and the token loopback on the channel — twice
+    (event-ledger vs strict-sum phased clocks, same differential oracle as
+    ``bench_overlap``), recording billed ms per generated token, $ per 1K
+    tokens, and the ``counters_identical`` bit.  Tokens must match the
+    on-device ``ServingEngine`` exactly."""
+    try:
+        import jax  # noqa: F401
+    except ModuleNotFoundError:
+        return [dict(name=f"lm_pipeline_{ch}_P{P}", us_per_call="",
+                     note="jax not installed")
+                for P in workers for ch in ("queue", "object")]
+
+    from repro.configs.base import get_config
+    from repro.faas.lm_pipeline import build_stage_executors, run_lm_pipeline
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config(arch).reduced()
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len),
+                           dtype=np.int32)
+    engine = ServingEngine(cfg, seed=0)
+    ref = engine.generate(prompts, max_new_tokens=max_new)
+    count_stats = ("publish_units", "bytes_sns_to_sqs", "sqs_api_calls",
+                   "s3_puts", "s3_gets", "s3_lists")
+    rows: List[dict] = []
+    for P in workers:
+        executors = build_stage_executors(cfg, engine.params, P)
+        for ch in ("queue", "object"):
+            t0 = time.perf_counter()
+            r_ov = run_lm_pipeline(cfg, prompts, engine.params,
+                                   max_new_tokens=max_new, P=P, channel=ch,
+                                   executors=executors, overlap=True)
+            r_ph = run_lm_pipeline(cfg, prompts, engine.params,
+                                   max_new_tokens=max_new, P=P, channel=ch,
+                                   executors=executors, overlap=False)
+            wall = time.perf_counter() - t0
+            assert np.array_equal(r_ov.tokens, ref.tokens)
+            identical = (
+                all(getattr(r_ov.stats, f) == getattr(r_ph.stats, f)
+                    for f in count_stats)
+                and r_ov.wire_exchange_bytes == r_ph.wire_exchange_bytes
+                and r_ov.raw_exchange_bytes == r_ph.raw_exchange_bytes
+            )
+            rows.append(dict(
+                name=f"lm_pipeline_{ch}_P{P}", P=P, arch=cfg.name,
+                per_token_ms=r_ov.per_token_ms,
+                phased_per_token_ms=r_ph.per_token_ms,
+                usd_per_1k_tokens=r_ov.usd_per_1k_tokens,
+                counters_identical=bool(identical),
+                speedup_vs_phased=round(r_ph.makespan / r_ov.makespan, 3),
+                cost_usd=r_ov.cost.total,
+                comms_usd=r_ov.cost.communication,
+                wire_kb=r_ov.wire_exchange_bytes / 1e3,
                 wall_s=round(wall, 4), wall_ms=round(wall * 1e3, 2),
             ))
     return rows
@@ -347,6 +419,7 @@ def run(neurons=512, layers=24, batch=64, workers=(2, 4, 8, 16),
                 wall_ms=round(wall * 1e3, 2),
             ))
     rows.extend(bench_overlap(net, x0, oracle))
+    rows.extend(bench_lm_pipeline())
     rows.extend(bench_backends(net, x0, oracle, P=max(workers),
                                backends=backends))
     rows.extend(bench_sharded_fleet(sharded_cases, paper_scale=paper_scale,

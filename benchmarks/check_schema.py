@@ -21,7 +21,15 @@ must fail CI instead of silently corrupting the trend.  Rules:
 * ``fsi_*_overlap_*`` rows (the double-buffered pipeline sweep) must carry
   numeric ``per_sample_ms`` AND ``phased_per_sample_ms`` plus a boolean
   ``counters_identical`` — the differential-oracle bit asserting charge
-  counts match the phased path exactly.
+  counts match the phased path exactly;
+* ``lm_pipeline_*`` rows (the pipeline-parallel LM serving sweep) must carry
+  numeric ``per_token_ms``, ``phased_per_token_ms`` and
+  ``usd_per_1k_tokens`` plus the same boolean ``counters_identical`` bit.
+
+``SCHEMA_VERSION`` stamps the artifact (written into ``meta`` by
+``benchmarks.run --json``): bump it whenever a rule above changes shape, so
+``bench_delta`` can refuse a baseline produced under an older schema instead
+of silently diffing incompatible rows.
 
 Usage::
 
@@ -34,8 +42,12 @@ import json
 import sys
 from typing import List
 
-TIMING_FIELDS = ("us_per_call", "per_sample_ms")
-TIMED_PREFIXES = ("spmm_roofline_", "decode_attn_", "decode_sharded_", "fsi_")
+# v2: lm_pipeline_* rows + per_token_ms timing column (PR 7)
+SCHEMA_VERSION = 2
+
+TIMING_FIELDS = ("us_per_call", "per_sample_ms", "per_token_ms")
+TIMED_PREFIXES = ("spmm_roofline_", "decode_attn_", "decode_sharded_",
+                  "fsi_", "lm_pipeline_")
 
 
 def validate(payload) -> List[str]:
@@ -95,6 +107,18 @@ def validate(payload) -> List[str]:
             if not isinstance(row.get("counters_identical"), bool):
                 problems.append(
                     f"{where} ({name}): overlap row without boolean "
+                    f"'counters_identical'")
+        if name.startswith("lm_pipeline_") and not row.get("note"):
+            for f in ("per_token_ms", "phased_per_token_ms",
+                      "usd_per_1k_tokens"):
+                v = row.get(f)
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    problems.append(
+                        f"{where} ({name}): LM pipeline row without numeric "
+                        f"{f!r}")
+            if not isinstance(row.get("counters_identical"), bool):
+                problems.append(
+                    f"{where} ({name}): LM pipeline row without boolean "
                     f"'counters_identical'")
         if "budget_s" in row:
             budget = row["budget_s"]

@@ -76,8 +76,11 @@ def main(argv=None) -> None:
     _emit(bench_launch.run(), sink)
     wall = time.time() - t0
     if args.json:
+        from benchmarks.check_schema import SCHEMA_VERSION
+
         payload = {
             "meta": {
+                "schema_version": SCHEMA_VERSION,
                 "quick": args.quick,
                 "paper_scale": args.paper_scale,
                 "wall_s": round(wall, 2),

@@ -34,6 +34,7 @@ __all__ = [
     "queue_cost",
     "object_cost",
     "serial_cost",
+    "activation_hop_cost",
     "recommend_configuration",
     "TpuCostConstants",
     "TPU_V5E",
@@ -143,6 +144,44 @@ def billed_publish_units(payload_bytes: int, pricing: PricingConstants = AWS_PRI
 
 
 Channel = Literal["serial", "queue", "object"]
+
+
+def activation_hop_cost(
+    channel: Channel,
+    activation_bytes: int,
+    pricing: PricingConstants = AWS_PRICING,
+    est_compression_ratio: float = 0.45,
+) -> float:
+    """Analytic $ for ONE inter-stage activation hop of the LM pipeline.
+
+    The pipeline executor ships a [B, S, d] (prefill) or [B, 1, d] (decode)
+    activation between consecutive stages; this prices that single
+    point-to-point transfer per channel so the stage planner / router can
+    predict $-per-token before running anything (the billed counterpart is
+    aggregated in ``WorkloadStats`` by ``run_lm_pipeline``).
+
+    Queue (Eq. 5/6): the compressed payload splits into ≤256KB publishes
+    billed in 64KB units, plus SNS→SQS bytes, plus one receive + one delete
+    batch per ≤10 messages.  Object (Eq. 7): one PUT, one GET, one LIST —
+    size-independent, which is exactly why Object wins at long prefills and
+    loses on per-token decode hops.
+    """
+    wire = max(1, int(activation_bytes * est_compression_ratio))
+    if channel == "queue":
+        n_msgs = max(1, math.ceil(wire / pricing.max_publish_payload))
+        units = max(n_msgs, billed_publish_units(wire, pricing))
+        publishes = math.ceil(n_msgs / pricing.max_messages_per_publish)
+        sqs = 2 * math.ceil(n_msgs / 10)  # receive + delete batches
+        return (
+            max(publishes, units) * pricing.sns_publish_64kb
+            + wire * pricing.sns_byte_to_sqs
+            + sqs * pricing.sqs_api_request
+        )
+    if channel == "object":
+        return pricing.s3_put + pricing.s3_get + pricing.s3_list
+    if channel == "serial":
+        return 0.0
+    raise ValueError(channel)
 
 
 def recommend_configuration(

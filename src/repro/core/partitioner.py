@@ -45,6 +45,9 @@ __all__ = [
     "hypergraph_partition",
     "measure_comm_volume",
     "CommVolumeReport",
+    "StageSpec",
+    "StagePlan",
+    "plan_stages",
 ]
 
 Method = Literal["hgp", "random", "block"]
@@ -324,3 +327,86 @@ def measure_comm_volume(
         mean_rows_per_target=(total_rows / total_pairs) if total_pairs else 0.0,
         max_worker_rows=int(per_worker.max(initial=0)),
     )
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-stage planning for the serverless LM executor
+# ---------------------------------------------------------------------------
+#
+# The FSI partitioners above split a *constant-width sparse network* row-wise
+# (data parallel over neurons).  LM serving over the FaaS fabric splits the
+# other way: the layer stack is cut into P **contiguous stages**, each stage
+# runs as one worker with its layer slice (and KV cache) resident, and only
+# the [B, S, d_model] activation crosses a stage boundary — the pipeline
+# analogue of the paper's "send only the rows the consumer needs".
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One contiguous slice of the layer stack.
+
+    ``start``/``stop`` are global layer indices (``[start, stop)``).
+    ``has_embed`` marks the stage that owns the token embedding (always the
+    first); ``has_head`` marks the stage that owns the final norm + unembed
+    (always the last).  With tied embeddings the table is resident on both —
+    the real deployment replicates it, and the weight-load bill reflects
+    that."""
+
+    index: int
+    start: int
+    stop: int
+    has_embed: bool
+    has_head: bool
+
+    @property
+    def n_layers(self) -> int:
+        return self.stop - self.start
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    P: int
+    n_layers: int
+    stages: tuple  # Tuple[StageSpec, ...]
+
+    def __post_init__(self):
+        assert self.stages[0].start == 0
+        assert self.stages[-1].stop == self.n_layers
+
+
+def plan_stages(layer_costs: Sequence[float], P: int) -> StagePlan:
+    """Cut ``len(layer_costs)`` layers into P contiguous, non-empty stages
+    balancing cumulative cost (cost = FLOPs or parameter bytes per layer —
+    any nonnegative weight; uniform costs give an even split).
+
+    Boundary ``i`` lands where the cumulative cost crosses ``total·i/P``,
+    then boundaries are repaired so every stage keeps ≥1 layer — the planner
+    is deterministic and never emits an empty stage.
+    """
+    L = len(layer_costs)
+    if P < 1:
+        raise ValueError(f"P must be >= 1, got {P}")
+    if P > L:
+        raise ValueError(f"cannot cut {L} layers into {P} non-empty stages")
+    costs = np.asarray(layer_costs, dtype=np.float64)
+    if (costs < 0).any():
+        raise ValueError("layer costs must be nonnegative")
+    cum = np.cumsum(costs)
+    total = cum[-1] if cum[-1] > 0 else float(L)
+    if cum[-1] <= 0:
+        cum = np.arange(1, L + 1, dtype=np.float64)
+    # ideal boundary after the layer where cumsum crosses total*i/P
+    bounds = [0]
+    for i in range(1, P):
+        b = int(np.searchsorted(cum, total * i / P, side="left")) + 1
+        # keep at least one layer per stage on both sides
+        b = max(b, bounds[-1] + 1)
+        b = min(b, L - (P - i))
+        bounds.append(b)
+    bounds.append(L)
+    stages = tuple(
+        StageSpec(index=i, start=bounds[i], stop=bounds[i + 1],
+                  has_embed=(i == 0), has_head=(i == P - 1))
+        for i in range(P)
+    )
+    return StagePlan(P=P, n_layers=L, stages=stages)

@@ -107,13 +107,21 @@ class FsiRunResult:
 
 
 def charge_weight_load(worker: WorkerState, artifact, latency: "LatencyModel") -> None:
-    """Bill a worker's model-shard read from object storage (CSR nnz × 8B at
-    the startup read bandwidth).  One definition for both call sites — worker
-    init and straggler re-invoke — so the cost expression can't drift.
+    """Bill a worker's model-shard read from object storage at the startup
+    read bandwidth.  One definition for every call site — FSI worker init,
+    straggler re-invoke, and LM-pipeline stage cold start — so the cost
+    expression can't drift.
+
+    The shard size is the artifact's ``weight_bytes`` when it carries one (an
+    LM pipeline stage loads only its own layer slice — it must never be
+    billed the full-model read), else the FSI convention CSR nnz × 8B.
 
     On the overlapped ledger this is a fleet-wide stall: nothing can compute
     or communicate without the weights, so both timelines sync."""
-    s = artifact.weight_nnz * 8 / latency.weight_load_bandwidth
+    nbytes = getattr(artifact, "weight_bytes", None)
+    if not nbytes:
+        nbytes = artifact.weight_nnz * 8
+    s = nbytes / latency.weight_load_bandwidth
     worker.charge_seconds(s)
     if worker.ledger is not None:
         worker.ledger.sync(s)

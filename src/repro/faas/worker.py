@@ -18,12 +18,12 @@ Two clock models live here:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 
 __all__ = ["WorkerState", "EventLedger", "ComputeModel",
-           "estimate_worker_memory_bytes"]
+           "ModelStageWorker", "estimate_worker_memory_bytes"]
 
 
 @dataclasses.dataclass
@@ -144,6 +144,54 @@ class WorkerState:
 
     def touch_memory(self, n_bytes: int) -> None:
         self.mem_high_water = max(self.mem_high_water, n_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Model-stage executor — the LM-pipeline sibling of the FSI worker
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ModelStageWorker:
+    """One pipeline stage of an LM, resident on one FaaS worker.
+
+    Holds the stage's sliced parameter subtree and its KV cache between
+    decode steps (KV residency: the cache never crosses a stage boundary —
+    only the [B, S, d] / [B, 1, d] activation does).  The compute functions
+    are injected (jitted closures over the family's stage fns), so this
+    module stays framework-free.
+
+    ``weight_bytes`` is the stage slice's actual parameter footprint — the
+    quantity ``charge_weight_load`` bills at worker startup, so a stage is
+    never billed the full-model load.  ``flops_per_token`` is the stage's
+    active-parameter FLOPs for one token (prefill multiplies by the prompt
+    length).
+    """
+
+    spec: Any                              # core.partitioner.StageSpec
+    params: Any                            # sliced stage parameter pytree
+    prefill_fn: Callable[..., Any]         # (params, x_in, max_len) -> (out, cache)
+    decode_fn: Callable[..., Any]          # (params, x_in, cache) -> (out, cache)
+    weight_bytes: int = 0
+    flops_per_token: float = 0.0
+    cache: Any = None                      # worker-resident KV cache
+
+    def reset(self) -> None:
+        self.cache = None
+
+    def run_prefill(self, x_in, max_len: int, extra=None):
+        if extra is not None:
+            out, self.cache = self.prefill_fn(self.params, x_in, max_len, extra)
+        else:
+            out, self.cache = self.prefill_fn(self.params, x_in, max_len)
+        return out
+
+    def run_decode(self, x_in):
+        if self.cache is None:
+            raise RuntimeError(
+                f"stage {self.spec} decode before prefill: no resident cache")
+        out, self.cache = self.decode_fn(self.params, x_in, self.cache)
+        return out
 
 
 PY_OVERHEAD = 1.4  # interpreter + allocator overhead on top of raw buffers

@@ -463,3 +463,146 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     logits = L.unembed(x, table)
     return logits, {"stacks": new_stacks, "length": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# pipeline stages (serverless LM executor)
+# ---------------------------------------------------------------------------
+#
+# Global layer index ``l`` maps to ``dense_blocks[l]`` for
+# ``l < cfg.first_dense_layers`` and ``moe_blocks[l - first_dense_layers]``
+# otherwise.  A stage slices each stack it straddles; running the full scans
+# as consecutive sub-scans over contiguous slices executes the same per-layer
+# ops in the same order, so chained stages reproduce the monolithic numerics.
+
+
+def _stage_stacks(cfg: ModelConfig, start: int, stop: int):
+    """(dense_range, moe_range) a [start, stop) slice covers — either may be
+    empty.  The moe range is stack-local (offset by first_dense_layers)."""
+    fd = cfg.first_dense_layers
+    dense = (start, min(stop, fd))
+    m = (max(start, fd) - fd, stop - fd)
+    return (dense if dense[1] > dense[0] else None,
+            m if m[1] > m[0] else None)
+
+
+def slice_stage_params(params: PyTree, spec, cfg: ModelConfig) -> PyTree:
+    dense_r, moe_r = _stage_stacks(cfg, spec.start, spec.stop)
+    out: Dict[str, Any] = {
+        "dense_blocks": (
+            jax.tree.map(lambda a: a[dense_r[0]:dense_r[1]],
+                         params["dense_blocks"]) if dense_r else None
+        ),
+        "moe_blocks": (
+            jax.tree.map(lambda a: a[moe_r[0]:moe_r[1]], params["moe_blocks"])
+            if moe_r else None
+        ),
+    }
+    if spec.has_embed:
+        out["embed"] = params["embed"]
+    if spec.has_head:
+        out["ln_f"] = params["ln_f"]
+        if "unembed" in params:
+            out["unembed"] = params["unembed"]
+        elif not spec.has_embed:
+            out["embed"] = params["embed"]  # tied head needs the table
+    return out
+
+
+def _present_stacks(sp: PyTree):
+    out = []
+    if sp.get("dense_blocks") is not None:
+        out.append(sp["dense_blocks"])
+    if sp.get("moe_blocks") is not None:
+        out.append(sp["moe_blocks"])
+    return out
+
+
+def stage_prefill(
+    sp: PyTree, spec, x_in: jnp.ndarray, cfg: ModelConfig, max_len: int,
+    dp_groups: int = 1,
+    layout: KVCacheLayout = KVCacheLayout(),
+) -> Tuple[jnp.ndarray, PyTree]:
+    """One stage of ``prefill`` — token ids [B, S] in on the embedding stage,
+    hidden states [B, S, d] otherwise; logits [B, 1, V] out on the head
+    stage.  The stage's KV stacks stay resident in its cache."""
+    if spec.has_embed:
+        x = L.embed_tokens(sp["embed"], x_in)
+    else:
+        x = x_in
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :].repeat(B, axis=0)
+    caches = []
+
+    for blocks in _present_stacks(sp):
+        def body(h, blk):
+            hn = L.rms_norm(h, blk["ln_attn"], cfg.norm_eps)
+            q, k, v = L.qkv_project(blk["attn"], hn)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            o = chunked_causal_attention(q, k, v)
+            h = h + L.out_project(blk["attn"], o, h.dtype)
+            hm = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
+            if blk.get("mlp") is not None:
+                h = h + L.mlp(blk["mlp"], hm)
+            else:
+                out, _ = moe_ffn_dispatch(blk["moe"], hm, cfg, dp_groups)
+                h = h + out
+            k_pad = pad_kv_to_layout(k, max_len, layout)
+            v_pad = pad_kv_to_layout(v, max_len, layout)
+            return h, (k_pad.astype(DECODE_CACHE_DTYPE),
+                       v_pad.astype(DECODE_CACHE_DTYPE))
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, (ks, vs) = jax.lax.scan(body, x, blocks)
+        caches.append({"k": ks, "v": vs})
+
+    cache = {"stacks": caches, "length": jnp.asarray(S, jnp.int32)}
+    if spec.has_head:
+        x = L.rms_norm(x[:, -1:], sp["ln_f"], cfg.norm_eps)
+        table = sp["embed"] if cfg.tie_embeddings else sp["unembed"]
+        return L.unembed(x, table), cache
+    return x, cache
+
+
+def stage_decode_step(
+    sp: PyTree, spec, x_in: jnp.ndarray, cache: PyTree, cfg: ModelConfig,
+    dp_groups: int = 1, *, attn_backend=None,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """One stage of ``decode_step`` — token [B, 1] in on the embedding stage,
+    hidden [B, 1, d] otherwise; logits [B, 1, V] out on the head stage."""
+    attn = get_backend("attention", attn_backend)
+    x = L.embed_tokens(sp["embed"], x_in) if spec.has_embed else x_in
+    B = x.shape[0]
+    pos = cache["length"]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    new_stacks = []
+
+    for blocks, kv in zip(_present_stacks(sp), cache["stacks"]):
+        def body(h, inp):
+            blk, k_cache, v_cache = inp
+            hn = L.rms_norm(h, blk["ln_attn"], cfg.norm_eps)
+            q, k, v = L.qkv_project(blk["attn"], hn)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            o, k_cache, v_cache = TF._decode_attn(
+                attn, q, k, v, k_cache, v_cache, pos, None)
+            h = h + L.out_project(blk["attn"], o.astype(h.dtype), h.dtype)
+            hm = L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps)
+            if blk.get("mlp") is not None:
+                h = h + L.mlp(blk["mlp"], hm)
+            else:
+                out, _ = moe_ffn_dispatch(blk["moe"], hm, cfg, dp_groups)
+                h = h + out
+            return h, (k_cache, v_cache)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (blocks, kv["k"], kv["v"]))
+        new_stacks.append({"k": ks, "v": vs})
+
+    new_cache = {"stacks": new_stacks, "length": pos + 1}
+    if spec.has_head:
+        x = L.rms_norm(x, sp["ln_f"], cfg.norm_eps)
+        table = sp["embed"] if cfg.tie_embeddings else sp["unembed"]
+        return L.unembed(x, table), new_cache
+    return x, new_cache

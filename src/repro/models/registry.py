@@ -123,6 +123,66 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
 
 
 # ---------------------------------------------------------------------------
+# pipeline stages — the serverless LM executor's per-stage API
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StageModel:
+    """Per-stage functions for the pipeline-parallel serverless executor.
+
+    ``slice_params(params, spec)`` materializes the subtree a
+    :class:`repro.core.partitioner.StageSpec` keeps worker-resident;
+    ``prefill(stage_params, spec, x_in, max_len)`` and
+    ``decode_step(stage_params, spec, x_in, stage_cache)`` run one stage —
+    token ids in on the embedding stage, the previous stage's hidden states
+    otherwise; logits out on the head stage.  The stage's KV cache never
+    crosses a stage boundary."""
+
+    cfg: ModelConfig
+    slice_params: Callable[..., PyTree]
+    prefill: Callable[..., Tuple[jnp.ndarray, PyTree]]
+    decode_step: Callable[..., Tuple[jnp.ndarray, PyTree]]
+
+
+def get_stage_model(cfg: ModelConfig, attn_backend=None) -> StageModel:
+    """Stage-executor functions for ``cfg``'s family.
+
+    Supported families: ``dense``/``vlm`` (transformer) and ``moe``.  The
+    recurrent families (ssm/hybrid) and the encoder-decoder keep state shapes
+    that the contiguous-layer-slice planner does not cover yet."""
+    from repro.core.backends import cache_layout_for, get_backend
+
+    fam = cfg.family
+    if fam not in ("dense", "vlm", "moe"):
+        raise ValueError(
+            f"pipeline stages are not supported for family {fam!r} "
+            f"(supported: dense, vlm, moe)")
+    attn = get_backend("attention", attn_backend)
+    layout = lambda max_len: cache_layout_for(attn, max_len)
+    if fam in ("dense", "vlm"):
+        return StageModel(
+            cfg=cfg,
+            slice_params=lambda p, spec: transformer.slice_stage_params(p, spec),
+            prefill=lambda sp, spec, x, max_len, extra=None:
+                transformer.stage_prefill(
+                    sp, spec, x, cfg, max_len, extra_embeds=extra,
+                    layout=layout(max_len)),
+            decode_step=lambda sp, spec, x, c:
+                transformer.stage_decode_step(
+                    sp, spec, x, c, cfg, attn_backend=attn),
+        )
+    return StageModel(
+        cfg=cfg,
+        slice_params=lambda p, spec: moe.slice_stage_params(p, spec, cfg),
+        prefill=lambda sp, spec, x, max_len, extra=None:
+            moe.stage_prefill(sp, spec, x, cfg, max_len, layout=layout(max_len)),
+        decode_step=lambda sp, spec, x, c:
+            moe.stage_decode_step(sp, spec, x, c, cfg, attn_backend=attn),
+    )
+
+
+# ---------------------------------------------------------------------------
 # input specs — concrete batches or ShapeDtypeStructs per (arch × shape)
 # ---------------------------------------------------------------------------
 

@@ -239,3 +239,111 @@ def decode_step(
 
 def param_count(cfg: ModelConfig) -> int:
     return cfg.param_count()
+
+
+# ---------------------------------------------------------------------------
+# pipeline stages (serverless LM executor)
+# ---------------------------------------------------------------------------
+#
+# A stage is a contiguous slice ``[spec.start, spec.stop)`` of the stacked
+# blocks, optionally with the embedding (first stage) and the final norm +
+# unembed (last stage).  Running the full scan as consecutive sub-scans over
+# contiguous slices executes the exact same per-layer ops in the exact same
+# order, so the chained stages reproduce the monolithic model's numerics —
+# the wire ships activations as float32, which round-trips bf16 exactly.
+
+
+def slice_stage_params(params: PyTree, spec) -> PyTree:
+    """Materialize the parameter subtree stage ``spec`` keeps resident."""
+    out: Dict[str, Any] = {
+        "blocks": jax.tree.map(lambda a: a[spec.start:spec.stop],
+                               params["blocks"]),
+    }
+    if spec.has_embed:
+        out["embed"] = params["embed"]
+    if spec.has_head:
+        out["ln_f"] = params["ln_f"]
+        if "unembed" in params:
+            out["unembed"] = params["unembed"]
+        elif not spec.has_embed:
+            out["embed"] = params["embed"]  # tied head needs the table
+    return out
+
+
+def _unembed_last(sp: PyTree, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = L.rms_norm(x, sp["ln_f"], cfg.norm_eps)
+    table = sp["embed"] if cfg.tie_embeddings else sp["unembed"]
+    return L.unembed(x, table)
+
+
+def stage_prefill(
+    sp: PyTree, spec, x_in: jnp.ndarray, cfg: ModelConfig, max_len: int,
+    extra_embeds: Optional[jnp.ndarray] = None,
+    layout: KVCacheLayout = KVCacheLayout(),
+) -> Tuple[jnp.ndarray, PyTree]:
+    """One stage of ``prefill``.  ``x_in`` is the token ids [B, S] on the
+    embedding stage, the previous stage's hidden states [B, S, d] otherwise.
+    Returns (hidden [B, S, d] — or last-position logits [B, 1, V] on the head
+    stage) plus this stage's resident KV cache."""
+    if spec.has_embed:
+        x = L.embed_tokens(sp["embed"], x_in)
+        if extra_embeds is not None:
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    else:
+        x = x_in
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :].repeat(B, axis=0)
+
+    def body(h, block):
+        hn = L.rms_norm(h, block["ln_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_project(block["attn"], hn)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        o = chunked_causal_attention(q, k, v)
+        h = h + L.out_project(block["attn"], o, h.dtype)
+        h = _mlp_apply(block, h, cfg)
+        k_pad = pad_kv_to_layout(k, max_len, layout)
+        v_pad = pad_kv_to_layout(v, max_len, layout)
+        return h, (k_pad, v_pad)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (ks, vs) = jax.lax.scan(body, x, sp["blocks"])
+    cache = {"k": ks, "v": vs, "length": jnp.asarray(S, jnp.int32)}
+    if spec.has_head:
+        return _unembed_last(sp, x[:, -1:], cfg), cache
+    return x, cache
+
+
+def stage_decode_step(
+    sp: PyTree, spec, x_in: jnp.ndarray, cache: PyTree, cfg: ModelConfig,
+    *, attn_backend=None,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """One stage of ``decode_step``.  ``x_in`` is the new token [B, 1] on the
+    embedding stage, the previous stage's hidden state [B, 1, d] otherwise.
+    Returns (hidden [B, 1, d] — or logits [B, 1, V] on the head stage) plus
+    the updated stage cache."""
+    attn = get_backend("attention", attn_backend)
+    x = L.embed_tokens(sp["embed"], x_in) if spec.has_embed else x_in
+    B = x.shape[0]
+    pos = cache["length"]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+
+    def body(carry, inp):
+        h = carry
+        block, k_cache, v_cache = inp
+        hn = L.rms_norm(h, block["ln_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_project(block["attn"], hn)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        o, k_cache, v_cache = _decode_attn(
+            attn, q, k, v, k_cache, v_cache, pos, None)
+        h = h + L.out_project(block["attn"], o.astype(h.dtype), h.dtype)
+        h = _mlp_apply(block, h, cfg)
+        return h, (k_cache, v_cache)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (sp["blocks"], cache["k"], cache["v"]))
+    new_cache = {"k": ks, "v": vs, "length": cache["length"] + 1}
+    if spec.has_head:
+        return _unembed_last(sp, x, cfg), new_cache
+    return x, new_cache

@@ -31,23 +31,40 @@ class GenerationResult:
     tokens: np.ndarray           # [B, max_new]
     prefill_logits: np.ndarray   # [B, vocab]
     steps: int
+    # Set by the fabric engine: the full LmPipelineResult (billing stats,
+    # dual-clock makespans, wire volumes).  None on the device path.
+    fabric: Optional[Any] = None
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Optional[PyTree] = None,
-                 seed: int = 0, attn_backend=None, max_len_hint: int = 0):
+                 seed: int = 0, attn_backend=None, max_len_hint: int = 0,
+                 engine: str = "device", pipeline_P: int = 2,
+                 pipeline_channel: str = "queue"):
         """``attn_backend``: decode-attention backend name/instance routed to
         every model family's decode step (``repro.core.backends``).  ``None``
         keeps the ``dense-ref`` oracle; ``"auto"`` asks the router for a
         :class:`repro.serving.router.DecodePlan` — backend plus the
         :class:`KVCacheLayout` its kernel-native caches need — from the
-        platform and ``max_len_hint`` (expected cache capacity)."""
+        platform and ``max_len_hint`` (expected cache capacity).
+
+        ``engine="fabric"`` serves over the serverless pipeline instead of
+        on-device: the layer stack splits into ``pipeline_P`` stages whose
+        activations travel the ``pipeline_channel`` fabric
+        (:func:`repro.faas.lm_pipeline.run_lm_pipeline`); results carry the
+        billing/clock telemetry in ``GenerationResult.fabric``."""
         self.cfg = cfg
         if attn_backend == "auto":
             from repro.serving.router import route_decode_plan
 
             attn_backend = route_decode_plan(
                 cfg, max_len=max_len_hint or None).attn_backend
+        if engine not in ("device", "fabric"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.engine = engine
+        self.pipeline_P = pipeline_P
+        self.pipeline_channel = pipeline_channel
+        self._stage_executors: Optional[list] = None
         self.attn_backend = get_backend("attention", attn_backend)
         self.model = get_model(cfg, attn_backend=self.attn_backend)
         self.params = params if params is not None else self.model.init(
@@ -68,6 +85,8 @@ class ServingEngine:
         extra: Optional[Dict[str, np.ndarray]] = None,
     ) -> GenerationResult:
         B, S = prompts.shape
+        if self.engine == "fabric":
+            return self._generate_fabric(prompts, max_new_tokens, extra)
         max_len = S + max_new_tokens + (self.cfg.frontend_tokens or 0)
         batch: Dict[str, Any] = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if extra:
@@ -84,3 +103,26 @@ class ServingEngine:
             prefill_logits=np.asarray(logits[:, 0]),
             steps=max_new_tokens,
         )
+
+    def _generate_fabric(
+        self,
+        prompts: np.ndarray,
+        max_new_tokens: int,
+        extra: Optional[Dict[str, np.ndarray]],
+    ) -> GenerationResult:
+        # Lazy import: lm_pipeline pulls the FaaS stack; the device path
+        # must not depend on it.
+        from repro.faas.lm_pipeline import build_stage_executors, run_lm_pipeline
+
+        if self._stage_executors is None:
+            self._stage_executors = build_stage_executors(
+                self.cfg, self.params, self.pipeline_P,
+                attn_backend=self.attn_backend)
+        res = run_lm_pipeline(
+            self.cfg, prompts, self.params,
+            max_new_tokens=max_new_tokens, P=self.pipeline_P,
+            channel=self.pipeline_channel, attn_backend=self.attn_backend,
+            extra=extra, executors=self._stage_executors,
+        )
+        return GenerationResult(tokens=res.tokens, prefill_logits=res.logits,
+                                steps=max_new_tokens, fabric=res)

@@ -35,10 +35,27 @@ class DecodePlan:
     per-step hot path, and the :class:`KVCacheLayout` its caches must be
     allocated with (kernel-native [B, KV, S, D], capacity padded to the
     backend's block_k) — resolved once per serving configuration and
-    threaded ``ServingEngine`` → ``get_model`` → family prefill/decode."""
+    threaded ``ServingEngine`` → ``get_model`` → family prefill/decode.
+
+    ``cache_layout`` is ``None`` when the plan was routed without a
+    ``max_len`` hint: the capacity is not known yet, and baking in a
+    placeholder would pin ``block_k`` from the wrong autotune bucket (a
+    capacity-1 layout chooses block_k=64; a real 2k-token cache needs 256 —
+    ``pallas-splitk`` then rejects the cache at the first decode step).
+    Resolve it at first use with :meth:`layout_for` once the prefill length
+    is known."""
 
     attn_backend: str
-    cache_layout: KVCacheLayout
+    cache_layout: Optional[KVCacheLayout] = None
+
+    def layout_for(self, max_len: int) -> KVCacheLayout:
+        """The layout for a now-known capacity: the routed one if it was
+        resolved with a hint, else derived from the backend's autotune
+        table for the actual ``max_len``."""
+        if self.cache_layout is not None:
+            return self.cache_layout
+        backend = get_backend("attention", self.attn_backend)
+        return cache_layout_for(backend, max_len)
 
 
 @dataclasses.dataclass
@@ -91,12 +108,18 @@ def route_decode_plan(cfg: ModelConfig, max_len: Optional[int] = None,
     ``pallas-splitk`` pins ``block_k`` from its autotune table for the
     expected capacity (so prefill pads the cache once and decode never
     re-lays it out); the view-based backends get the identity layout.
+    Without a ``max_len`` hint the layout stays unresolved (``None``) —
+    callers derive it from the first request's prefill length via
+    :meth:`DecodePlan.layout_for` instead of inheriting a capacity-1
+    placeholder from the wrong ``block_k`` bucket.
     """
     name = route_attention_backend(cfg, max_len=max_len, platform=platform)
+    if max_len is None:
+        return DecodePlan(attn_backend=name, cache_layout=None)
     backend = get_backend("attention", name)
     return DecodePlan(
         attn_backend=name,
-        cache_layout=cache_layout_for(backend, max_len or 1),
+        cache_layout=cache_layout_for(backend, max_len),
     )
 
 

@@ -499,6 +499,77 @@ class TestChannelFailurePaths:
         assert results[False][1] == results[True][1]
 
 
+class TestLmPipelineChannelFailures:
+    """PR 7 satellite: the LM pipeline's activation hops and token loopback
+    reuse the FSI drain loops, so (src, seq) dedupe + the monotone hop-tag
+    stale-drop must keep tokens/logits exact under duplicate and reordered
+    delivery on both fabrics — with the overlap ledger staying sane."""
+
+    P = 3
+
+    @pytest.fixture(scope="class")
+    def lm_case(self):
+        from repro.configs.base import get_config
+        from repro.faas.lm_pipeline import build_stage_executors
+        from repro.serving.engine import ServingEngine
+
+        cfg = get_config("internlm2-1.8b").reduced()
+        rng = np.random.default_rng(11)
+        prompts = rng.integers(0, cfg.vocab_size, (2, 8), dtype=np.int32)
+        engine = ServingEngine(cfg, seed=0)
+        ref = engine.generate(prompts, max_new_tokens=2)
+        executors = build_stage_executors(cfg, engine.params, self.P)
+        return cfg, prompts, engine.params, ref, executors
+
+    def _run(self, lm_case, channel, fabric):
+        from repro.faas.lm_pipeline import run_lm_pipeline
+
+        cfg, prompts, params, _, executors = lm_case
+        return run_lm_pipeline(cfg, prompts, params, max_new_tokens=2,
+                               P=self.P, channel=channel,
+                               executors=executors, fabric=fabric)
+
+    def _check(self, r, ref, ledger_bound=True):
+        np.testing.assert_array_equal(r.tokens, ref.tokens)
+        np.testing.assert_allclose(r.logits, ref.prefill_logits, atol=3e-2)
+        if ledger_bound:
+            # redelivery may only push clocks forward, never unwind them
+            assert r.metrics["overlap_makespan_s"] <= \
+                r.metrics["phased_makespan_s"] + 1e-9
+
+    @pytest.mark.parametrize("fault", sorted(QUEUE_FAULTS))
+    def test_queue_faults_keep_pipeline_exact(self, lm_case, fault):
+        # tiny payload cap forces multi-chunk prefill hops, so chunk
+        # reordering/duplication has something to corrupt
+        fabric = QUEUE_FAULTS[fault](self.P, pricing=SMALL_PRICING)
+        self._check(self._run(lm_case, "queue", fabric), lm_case[3])
+
+    @pytest.mark.parametrize("fault", sorted(OBJECT_FAULTS))
+    def test_object_faults_keep_pipeline_exact(self, lm_case, fault):
+        fabric = OBJECT_FAULTS[fault](self.P)
+        # the duplicating object fabric stamps its redelivery +0.5s on the
+        # LEDGER timeline only (same asymmetry the FSI object-fault test
+        # accepts), so the ledger ≤ phased bound is out of scope here
+        self._check(self._run(lm_case, "object", fabric), lm_case[3],
+                    ledger_bound=(fault != "duplicate"))
+
+    def test_duplicates_change_billing_not_results(self, lm_case):
+        """At-least-once delivery doubles what the FABRIC carries (raw bytes
+        exactly 2x: every publish re-published), but the receive-side
+        (src, seq) dedupe retires every duplicate — tokens and logits match
+        the clean run bit-for-bit, and only billing grows."""
+        clean = self._run(lm_case, "queue",
+                          QueueFabric(self.P, pricing=SMALL_PRICING))
+        noisy = self._run(lm_case, "queue",
+                          DuplicatingQueueFabric(self.P,
+                                                 pricing=SMALL_PRICING))
+        np.testing.assert_array_equal(clean.tokens, noisy.tokens)
+        np.testing.assert_array_equal(clean.logits, noisy.logits)
+        assert noisy.raw_exchange_bytes == 2 * clean.raw_exchange_bytes
+        assert noisy.stats.publish_units == 2 * clean.stats.publish_units
+        assert noisy.stats.sqs_api_calls >= clean.stats.sqs_api_calls
+
+
 class TestStragglersUnderOverlap:
     """Straggler slowdown + re-invoke must work when the reported clocks come
     from the overlapped ledger: charge counts stay bit-identical to the

@@ -1,0 +1,265 @@
+"""Pipeline-parallel LM serving over the FaaS fabric (PR 7 acceptance).
+
+* stage planner: contiguous cover, cost balance, embed/head flags;
+* pipeline ≡ on-device ``ServingEngine``: identical greedy tokens and
+  matching final logits for a dense transformer AND the MoE family across
+  P∈{2,4} on both queue and object channels;
+* billing: every charge count bit-identical between ``overlap=True`` and
+  the phased oracle, overlap makespan ≤ phased makespan;
+* stage cold start bills the stage's layer-slice bytes, never the full
+  model, and syncs both ledger timelines;
+* ``route_decode_plan`` no longer bakes a capacity-1 layout when routed
+  without a ``max_len`` hint (the pallas-splitk block_k bucket regression).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.configs.base import get_config
+from repro.core.partitioner import plan_stages
+from repro.faas.lm_pipeline import (
+    build_stage_executors,
+    run_lm_pipeline,
+    stage_layer_costs,
+)
+from repro.faas.simulator import LatencyModel, charge_weight_load
+from repro.faas.worker import EventLedger, ModelStageWorker, WorkerState
+from repro.serving.engine import ServingEngine
+
+COUNT_STATS = ("P", "memory_mb", "publish_units", "bytes_sns_to_sqs",
+               "sqs_api_calls", "s3_puts", "s3_gets", "s3_lists")
+
+ARCHS = ("internlm2-1.8b", "deepseek-moe-16b")
+MAX_NEW = 3
+
+
+class TestStagePlanner:
+    def test_uniform_split_covers_contiguously(self):
+        plan = plan_stages([1.0] * 8, 4)
+        assert [s.n_layers for s in plan.stages] == [2, 2, 2, 2]
+        assert plan.stages[0].start == 0 and plan.stages[-1].stop == 8
+        for a, b in zip(plan.stages, plan.stages[1:]):
+            assert a.stop == b.start
+
+    def test_weighted_split_balances_cost(self):
+        # one heavy layer up front: the cheap tail should pack together
+        costs = [8.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]
+        plan = plan_stages(costs, 2)
+        loads = [sum(costs[s.start:s.stop]) for s in plan.stages]
+        # best contiguous 2-way split of 15 total is 8 | 7
+        assert loads == [8.0, 7.0]
+
+    def test_extreme_skew_keeps_every_stage_nonempty(self):
+        plan = plan_stages([0.0, 0.0, 0.0, 100.0], 4)
+        assert [s.n_layers for s in plan.stages] == [1, 1, 1, 1]
+
+    def test_embed_and_head_flags(self):
+        plan = plan_stages([1.0] * 6, 3)
+        assert plan.stages[0].has_embed and not plan.stages[0].has_head
+        assert plan.stages[-1].has_head and not plan.stages[-1].has_embed
+        mid = plan.stages[1]
+        assert not mid.has_embed and not mid.has_head
+        solo = plan_stages([1.0], 1).stages[0]
+        assert solo.has_embed and solo.has_head
+
+    def test_invalid_inputs_raise(self):
+        with pytest.raises(ValueError):
+            plan_stages([1.0, 1.0], 0)
+        with pytest.raises(ValueError):
+            plan_stages([1.0, 1.0], 3)   # more stages than layers
+        with pytest.raises(ValueError):
+            plan_stages([1.0, -1.0], 1)
+
+    def test_moe_layer_costs_weigh_active_params(self):
+        cfg = get_config("deepseek-moe-16b").reduced()
+        costs = stage_layer_costs(cfg)
+        assert len(costs) == cfg.n_layers
+        assert all(c > 0 for c in costs)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Per-arch: reduced config, prompts, device engine, reference output."""
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        rng = np.random.default_rng(7)
+        prompts = rng.integers(0, cfg.vocab_size, (2, 10), dtype=np.int32)
+        engine = ServingEngine(cfg, seed=0)
+        ref = engine.generate(prompts, max_new_tokens=MAX_NEW)
+        out[arch] = (cfg, prompts, engine, ref, {})
+    return out
+
+
+def _executors(served_entry, P):
+    cfg, _, engine, _, cache = served_entry
+    if P not in cache:
+        cache[P] = build_stage_executors(cfg, engine.params, P)
+    return cache[P]
+
+
+class TestPipelineParity:
+    @pytest.mark.parametrize("channel", ["queue", "object"])
+    @pytest.mark.parametrize("P", [2, 4])
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_matches_device_engine_and_phased_oracle(self, served, arch, P,
+                                                     channel):
+        cfg, prompts, engine, ref, _ = served[arch]
+        executors = _executors(served[arch], P)
+        ov = run_lm_pipeline(cfg, prompts, engine.params,
+                             max_new_tokens=MAX_NEW, P=P, channel=channel,
+                             executors=executors, overlap=True)
+        ph = run_lm_pipeline(cfg, prompts, engine.params,
+                             max_new_tokens=MAX_NEW, P=P, channel=channel,
+                             executors=executors, overlap=False)
+        # --- serving parity: same tokens, same final logits ----------------
+        np.testing.assert_array_equal(ov.tokens, ref.tokens)
+        np.testing.assert_allclose(ov.logits, ref.prefill_logits, atol=3e-2)
+        np.testing.assert_array_equal(ov.tokens, ph.tokens)
+        np.testing.assert_array_equal(ov.logits, ph.logits)
+        # --- billing: counts bit-identical across clock models -------------
+        for f in COUNT_STATS:
+            assert getattr(ov.stats, f) == getattr(ph.stats, f), f
+        assert ov.raw_exchange_bytes == ph.raw_exchange_bytes
+        assert ov.wire_exchange_bytes == ph.wire_exchange_bytes
+        assert ov.cost.communication == ph.cost.communication
+        # --- clocks: overlap can only remove serialization ------------------
+        assert ov.makespan <= ph.makespan + 1e-12
+        assert ov.metrics["overlap_makespan_s"] == ov.makespan
+        assert ph.metrics["phased_makespan_s"] == ph.makespan
+        assert ov.metrics["phased_makespan_s"] == \
+            ph.metrics["phased_makespan_s"]
+        assert ov.metrics["overlap_makespan_s"] == \
+            ph.metrics["overlap_makespan_s"]
+
+    def test_kv_stays_worker_resident(self, served):
+        """Decode ships only [B, 1, d] activations + the token loopback —
+        the KV cache never crosses a stage boundary.  A decode step's raw
+        wire delta must therefore not scale with the prefill length."""
+        cfg, prompts, engine, _, _ = served["internlm2-1.8b"]
+        executors = _executors(served["internlm2-1.8b"], 2)
+        one = run_lm_pipeline(cfg, prompts, engine.params, max_new_tokens=1,
+                              P=2, channel="queue", executors=executors)
+        two = run_lm_pipeline(cfg, prompts, engine.params, max_new_tokens=2,
+                              P=2, channel="queue", executors=executors)
+        from repro.faas.payload import _HEADER
+
+        B = prompts.shape[0]
+        per_step = two.raw_exchange_bytes - one.raw_exchange_bytes
+        # one [B, d] hidden hop + one [B, 1] token loopback, fp32 on the
+        # wire, each framed as a single chunk (header + row ids + values)
+        frame = _HEADER.size + B * 4
+        expect = (frame + B * cfg.d_model * 4) + (frame + B * 4)
+        assert per_step == expect
+
+    def test_engine_fabric_path(self, served):
+        cfg, prompts, engine, ref, _ = served["internlm2-1.8b"]
+        fab = ServingEngine(cfg, params=engine.params, engine="fabric",
+                            pipeline_P=2, pipeline_channel="queue")
+        got = fab.generate(prompts, max_new_tokens=MAX_NEW)
+        np.testing.assert_array_equal(got.tokens, ref.tokens)
+        np.testing.assert_allclose(got.prefill_logits, ref.prefill_logits,
+                                   atol=3e-2)
+        assert got.fabric is not None
+        assert got.fabric.stats.sqs_api_calls > 0
+        assert got.fabric.metrics["phased_makespan_s"] >= \
+            got.fabric.metrics["overlap_makespan_s"]
+
+    def test_unknown_engine_rejected(self, served):
+        cfg, _, engine, _, _ = served["internlm2-1.8b"]
+        with pytest.raises(ValueError):
+            ServingEngine(cfg, params=engine.params, engine="telepathy")
+
+
+class TestStageColdStart:
+    def test_stage_slices_partition_the_weights(self, served):
+        cfg, _, engine, _, _ = served["internlm2-1.8b"]
+        import jax
+
+        full = sum(leaf.nbytes for leaf in jax.tree.leaves(engine.params))
+        for P in (2, 4):
+            executors = _executors(served["internlm2-1.8b"], P)
+            for ex in executors:
+                assert 0 < ex.weight_bytes < full
+            # stage slices jointly cover the model (tied embeddings may be
+            # duplicated on the head stage, hence >=)
+            assert sum(ex.weight_bytes for ex in executors) >= full
+
+    def test_cold_start_bills_slice_not_full_model(self, served):
+        """Satellite: a stage worker loading only its layer slice must be
+        billed for those bytes, not the full-model load."""
+        cfg, _, engine, _, _ = served["internlm2-1.8b"]
+        import jax
+
+        full = sum(leaf.nbytes for leaf in jax.tree.leaves(engine.params))
+        ex = _executors(served["internlm2-1.8b"], 4)[1]
+        lat = LatencyModel()
+        w = WorkerState(rank=0, memory_mb=1000)
+        charge_weight_load(w, ex, lat)
+        assert w.clock == pytest.approx(
+            ex.weight_bytes / lat.weight_load_bandwidth)
+        assert w.clock < full / lat.weight_load_bandwidth
+
+    def test_cold_start_syncs_both_ledger_timelines(self):
+        """A weight load occupies the whole worker: both ledger timelines
+        meet at the pre-load frontier, then advance together."""
+        ex = ModelStageWorker(spec=None, params=None, prefill_fn=None,
+                              decode_fn=None, weight_bytes=250_000_000)
+        lat = LatencyModel()  # 250 MB/s -> exactly 1.0s
+        w = WorkerState(rank=0, memory_mb=1000,
+                        ledger=EventLedger(t_compute=0.3, t_channel=2.0))
+        charge_weight_load(w, ex, lat)
+        assert w.ledger.t_compute == w.ledger.t_channel == pytest.approx(3.0)
+        assert w.clock == pytest.approx(1.0)
+
+
+class TestRouterMaxLenFallback:
+    """Regression for the ``cache_layout_for(backend, max_len or 1)``
+    fallback: with no hint the old plan pinned block_k from the capacity-1
+    bucket (64), which ``pallas-splitk`` rejects once a real ~2k-token cache
+    shows up (1984 % 64 == 0 but the right bucket is 256 — and a true
+    capacity-1 layout can't represent it at all)."""
+
+    def test_unhinted_plan_defers_layout(self):
+        from repro.serving.router import route_decode_plan
+
+        cfg = get_config("internlm2-1.8b").reduced()
+        plan = route_decode_plan(cfg, platform="tpu")  # no max_len hint
+        assert plan.attn_backend == "pallas-splitk"
+        assert plan.cache_layout is None
+        # first use: capacity derived from the actual prefill length
+        layout = plan.layout_for(1984)
+        assert layout.block_k == 256          # table: ≤4096 → 256
+        padded = layout.padded_len(1984)
+        layout.check_capacity(padded)         # splitk accepts the cache
+        assert padded == 2048
+
+    def test_hinted_plan_still_concrete(self):
+        from repro.serving.router import route_decode_plan
+
+        cfg = get_config("internlm2-1.8b").reduced()
+        plan = route_decode_plan(cfg, max_len=1000, platform="tpu")
+        assert plan.cache_layout is not None
+        # layout_for defers to the routed layout when one was resolved
+        assert plan.layout_for(8) is plan.cache_layout
+
+    def test_old_fallback_would_have_wrong_bucket(self):
+        """The failure the fix removes, step by step: the capacity-1 layout
+        pads a 1984-token cache within the block_k=64 bucket (1984 is already
+        a 64-multiple), but the splitk dispatch re-resolves the layout for
+        the *actual* capacity — block_k=256 — and rejects 1984."""
+        from repro.core.backends import cache_layout_for, get_backend
+
+        backend = get_backend("attention", "pallas-splitk")
+        stale = cache_layout_for(backend, 1)      # what `max_len or 1` built
+        assert stale.block_k == 64
+        stale_padded = stale.padded_len(1984)     # 1984: no repair happens
+        per_step = cache_layout_for(backend, stale_padded)
+        assert per_step.block_k == 256
+        with pytest.raises(ValueError):
+            per_step.check_capacity(stale_padded)
+        # the fixed path pads into the right bucket up front
+        good = cache_layout_for(backend, 1984)
+        good.check_capacity(good.padded_len(1984))

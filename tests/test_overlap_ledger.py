@@ -115,6 +115,60 @@ class TestRunFsiLedgerInvariants:
         assert vars(a.stats) == vars(b.stats)
 
 
+class TestLmPipelineLedgerInvariants:
+    """PR 7: the pipeline-parallel LM executor rides the same dual-clock
+    contract as ``run_fsi`` — the phased clock drives every activation hop
+    and token loopback, the ledger re-times them, and switching the reported
+    clock cannot move a single billable count."""
+
+    @pytest.fixture(scope="class")
+    def lm_case(self):
+        pytest.importorskip("jax")
+        from repro.configs.base import get_config
+        from repro.faas.lm_pipeline import build_stage_executors
+        from repro.serving.engine import ServingEngine
+
+        cfg = get_config("internlm2-1.8b").reduced()
+        rng = np.random.default_rng(3)
+        prompts = rng.integers(0, cfg.vocab_size, (2, 8), dtype=np.int32)
+        engine = ServingEngine(cfg, seed=0)
+        ref = engine.generate(prompts, max_new_tokens=2)
+        executors = {P: build_stage_executors(cfg, engine.params, P)
+                     for P in (2, 4)}
+        return cfg, prompts, engine.params, ref, executors
+
+    @pytest.mark.parametrize("channel", ["queue", "object"])
+    @pytest.mark.parametrize("P", [2, 4])
+    def test_pipeline_counts_identical_overlap_vs_phased(self, lm_case,
+                                                         channel, P):
+        from repro.faas.lm_pipeline import run_lm_pipeline
+
+        cfg, prompts, params, ref, executors = lm_case
+        a = run_lm_pipeline(cfg, prompts, params, max_new_tokens=2, P=P,
+                            channel=channel, executors=executors[P],
+                            overlap=True)
+        b = run_lm_pipeline(cfg, prompts, params, max_new_tokens=2, P=P,
+                            channel=channel, executors=executors[P],
+                            overlap=False)
+        # same algorithm, same bytes, same answer — and it is the answer
+        np.testing.assert_array_equal(a.tokens, ref.tokens)
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_array_equal(a.logits, b.logits)
+        # charge counts bit-identical (durations are the only delta)
+        for f in COUNT_STATS:
+            assert getattr(a.stats, f) == getattr(b.stats, f), f
+        assert a.raw_exchange_bytes == b.raw_exchange_bytes
+        assert a.wire_exchange_bytes == b.wire_exchange_bytes
+        assert a.cost.communication == b.cost.communication
+        # overlap can only remove serialization
+        assert a.makespan <= b.makespan + 1e-12
+        np.testing.assert_array_compare(np.less_equal, a.worker_times,
+                                        b.worker_times + 1e-12)
+        # both makespans reported identically from either run
+        assert a.metrics["phased_makespan_s"] == b.makespan
+        assert b.metrics["overlap_makespan_s"] == a.makespan
+
+
 class TestAggregatedSends:
     """Acceptance: per-layer publish API calls are O(1) per worker, not
     O(out-degree) — all of a worker's per-peer messages ride one batched
