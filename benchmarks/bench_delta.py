@@ -40,6 +40,8 @@ from benchmarks.check_schema import SCHEMA_VERSION
 # deliberately NOT in TIMING_FIELDS (host wall-clock, machine-dependent).
 # The ``lm_pipeline_*`` rows gate the pipeline-parallel LM executor's billed
 # per_token_ms across both channels and stage counts.
+# The ``serving_cb_*`` rows gate continuous-batching scheduling efficiency:
+# modeled per_token_ms from decode slot-step counts, static vs continuous.
 DEFAULT_ROWS = (
     "fsi_serial",
     "fsi_queue_P2",
@@ -60,6 +62,8 @@ DEFAULT_ROWS = (
     "lm_pipeline_queue_P4",
     "lm_pipeline_object_P2",
     "lm_pipeline_object_P4",
+    "serving_cb_static_S2",
+    "serving_cb_continuous_S2",
 )
 
 TIMING_FIELDS = ("per_sample_ms", "per_token_ms", "us_per_call")

@@ -24,7 +24,13 @@ must fail CI instead of silently corrupting the trend.  Rules:
   counts match the phased path exactly;
 * ``lm_pipeline_*`` rows (the pipeline-parallel LM serving sweep) must carry
   numeric ``per_token_ms``, ``phased_per_token_ms`` and
-  ``usd_per_1k_tokens`` plus the same boolean ``counters_identical`` bit.
+  ``usd_per_1k_tokens`` plus the same boolean ``counters_identical`` bit;
+* ``serving_cb_*`` rows (continuous batching vs padded-static, PR 8) must
+  carry numeric ``per_token_ms`` and ``tokens_per_s`` (both modeled from
+  decode slot-step counts — deterministic and gated), and the
+  ``serving_cb_continuous_*`` row must carry a boolean ``beats_static`` —
+  the acceptance bit asserting continuous sustained throughput strictly
+  above the padded-static baseline at equal slot count.
 
 ``SCHEMA_VERSION`` stamps the artifact (written into ``meta`` by
 ``benchmarks.run --json``): bump it whenever a rule above changes shape, so
@@ -43,11 +49,12 @@ import sys
 from typing import List
 
 # v2: lm_pipeline_* rows + per_token_ms timing column (PR 7)
-SCHEMA_VERSION = 2
+# v3: serving_cb_* rows — continuous-batching throughput gate (PR 8)
+SCHEMA_VERSION = 3
 
 TIMING_FIELDS = ("us_per_call", "per_sample_ms", "per_token_ms")
 TIMED_PREFIXES = ("spmm_roofline_", "decode_attn_", "decode_sharded_",
-                  "fsi_", "lm_pipeline_")
+                  "fsi_", "lm_pipeline_", "serving_cb_")
 
 
 def validate(payload) -> List[str]:
@@ -120,6 +127,18 @@ def validate(payload) -> List[str]:
                 problems.append(
                     f"{where} ({name}): LM pipeline row without boolean "
                     f"'counters_identical'")
+        if name.startswith("serving_cb_") and not row.get("note"):
+            for f in ("per_token_ms", "tokens_per_s"):
+                v = row.get(f)
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    problems.append(
+                        f"{where} ({name}): serving_cb row without numeric "
+                        f"{f!r}")
+            if name.startswith("serving_cb_continuous_") \
+                    and not isinstance(row.get("beats_static"), bool):
+                problems.append(
+                    f"{where} ({name}): continuous row without boolean "
+                    f"'beats_static'")
         if "budget_s" in row:
             budget = row["budget_s"]
             if not isinstance(budget, (int, float)) or isinstance(budget, bool):

@@ -538,6 +538,13 @@ class KVCacheLayout:
                 f"block_k={self.block_k}; pad the cache at prefill with "
                 f"KVCacheLayout.padded_len (ServingEngine does this)")
 
+    def blocks_for(self, max_len: int) -> int:
+        """Number of ``block_k``-sized pages a sequence of up to ``max_len``
+        tokens occupies — the allocation unit of the paged KV pool
+        (``serving/kv_pool.py``): a request holds ``blocks_for(prompt +
+        max_new)`` pages for its lifetime and frees them at retirement."""
+        return self.padded_len(max_len) // max(1, int(self.block_k))
+
 
 def cache_layout_for(backend, max_len: int) -> KVCacheLayout:
     """The :class:`KVCacheLayout` a backend instance wants for a cache of

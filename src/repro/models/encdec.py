@@ -231,3 +231,13 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
     return logits, {"k": ks, "v": vs, "kc": cache["kc"], "vc": cache["vc"],
                     "length": pos + 1,
                     "src_length": jnp.asarray(src_len, jnp.int32)}
+
+
+def cache_seq_axes(cache):
+    """Growing-KV sequence axes: decoder self-attention ``k``/``v`` page into
+    the KV pool (seq axis -2); the cross-attention ``kc``/``vc`` are written
+    once at prefill and stay slot-resident, as do ``length``/``src_length``.
+    See :func:`repro.models.kvcache.seq_axis_tree`."""
+    from repro.models.kvcache import seq_axis_tree
+
+    return seq_axis_tree(cache)

@@ -312,3 +312,13 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
         "tail_kv": tail_kv, "tail_state": tail_state,
         "length": pos + 1,
     }
+
+
+def cache_seq_axes(cache):
+    """Growing-KV sequence axes: the ``kv`` and ``tail_kv`` stacks page into
+    the KV pool (seq axis -2); conv/SSM ``states``/``tail_state`` and
+    ``length`` stay slot-resident.  See
+    :func:`repro.models.kvcache.seq_axis_tree`."""
+    from repro.models.kvcache import seq_axis_tree
+
+    return seq_axis_tree(cache)

@@ -15,8 +15,9 @@ batch in this engine; ragged batches live in serving/batching.py).
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Any, Dict, Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.backends import KVCacheLayout
@@ -24,7 +25,40 @@ from repro.core.backends import KVCacheLayout
 PyTree = Dict[str, jnp.ndarray]
 
 __all__ = ["KVCacheLayout", "init_attn_cache", "init_ssm_cache",
-           "update_layer_kv", "pad_kv_to_layout"]
+           "update_layer_kv", "pad_kv_to_layout", "seq_axis_tree"]
+
+# Cache-dict keys whose subtrees hold *growing* self-attention KV (sequence
+# axis at -2, one new position written per decode step) vs. state that is
+# slot-resident in the continuous-batching scheduler (SSM/conv states, the
+# encoder-decoder's static cross KV, scalars).
+_GROWING_KV_KEYS = frozenset({"k", "v", "kv", "tail_kv"})
+_STATIC_KEYS = frozenset({"kc", "vc", "conv", "ssm", "states", "tail_state",
+                          "length", "src_length"})
+
+
+def seq_axis_tree(cache: Any) -> Any:
+    """Pytree (matching ``cache``) of ``Optional[int]``: the sequence axis of
+    every *growing* KV leaf (always ``-2`` in the kernel-native layout), or
+    ``None`` for slot-resident state.
+
+    This is the single source of truth for which cache leaves the paged
+    :class:`repro.serving.kv_pool.KVBlockPool` owns and which the scheduler
+    keeps stacked per slot.  The classification is by dict key along the
+    tree path: ``k``/``v``/``kv``/``tail_kv`` subtrees grow (excluding the
+    encoder-decoder's ``kc``/``vc`` cross KV, which is written once at
+    prefill), everything else is slot-resident.  Families re-export this as
+    ``cache_seq_axes`` so the scheduler never pattern-matches shapes.
+    """
+
+    def classify(path, leaf) -> Optional[int]:
+        keys = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        if any(k in _STATIC_KEYS for k in keys):
+            return None
+        if any(k in _GROWING_KV_KEYS for k in keys) and jnp.ndim(leaf) >= 4:
+            return -2
+        return None
+
+    return jax.tree_util.tree_map_with_path(classify, cache)
 
 
 def init_attn_cache(

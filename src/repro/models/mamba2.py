@@ -326,3 +326,11 @@ def decode_step(params: PyTree, token: jnp.ndarray, cache: PyTree,
     return logits, {
         "conv": conv_states, "ssm": ssm_states, "length": cache["length"] + 1,
     }
+
+
+def cache_seq_axes(cache):
+    """Attention-free family: no growing KV — every state leaf is
+    slot-resident in the continuous-batching scheduler (all ``None``)."""
+    import jax
+
+    return jax.tree_util.tree_map(lambda _: None, cache)

@@ -606,3 +606,12 @@ def stage_decode_step(
         table = sp["embed"] if cfg.tie_embeddings else sp["unembed"]
         return L.unembed(x, table), new_cache
     return x, new_cache
+
+
+def cache_seq_axes(cache):
+    """Growing-KV sequence axes: every ``k``/``v`` leaf inside ``stacks``
+    pages into the KV pool (seq axis -2); ``length`` stays slot-resident.
+    See :func:`repro.models.kvcache.seq_axis_tree`."""
+    from repro.models.kvcache import seq_axis_tree
+
+    return seq_axis_tree(cache)

@@ -30,6 +30,11 @@ class ModelApi:
     forward: Callable[..., jnp.ndarray]
     prefill: Callable[..., Tuple[jnp.ndarray, PyTree]]
     decode_step: Callable[..., Tuple[jnp.ndarray, PyTree]]
+    # cache pytree → matching pytree of Optional[int]: the sequence axis of
+    # every growing KV leaf (paged by serving/kv_pool.py), None for
+    # slot-resident state.  vmap-in_axes convention: traverse the result with
+    # is_leaf=lambda x: x is None.
+    cache_seq_axes: Callable[[PyTree], PyTree] = None
 
 
 def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
@@ -60,6 +65,7 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
                 p, b["tokens"], cfg, max_len, layout=layout(max_len)),
             decode_step=lambda p, t, c, **kw: transformer.decode_step(
                 p, t, c, cfg, attn_backend=attn, **kw),
+            cache_seq_axes=transformer.cache_seq_axes,
         )
     if fam == "vlm":
         return ModelApi(
@@ -73,6 +79,7 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
                 layout=layout(max_len)),
             decode_step=lambda p, t, c, **kw: transformer.decode_step(
                 p, t, c, cfg, attn_backend=attn, **kw),
+            cache_seq_axes=transformer.cache_seq_axes,
         )
     if fam == "moe":
         return ModelApi(
@@ -86,6 +93,7 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
                 layout=layout(max_len)),
             decode_step=lambda p, t, c, dp_groups=1, **kw: moe.decode_step(
                 p, t, c, cfg, dp_groups, attn_backend=attn, **kw),
+            cache_seq_axes=moe.cache_seq_axes,
         )
     if fam == "ssm":
         return ModelApi(
@@ -96,6 +104,7 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
             prefill=lambda p, b, max_len=0: mamba2.prefill(
                 p, b["tokens"], cfg, max_len),
             decode_step=lambda p, t, c: mamba2.decode_step(p, t, c, cfg),
+            cache_seq_axes=mamba2.cache_seq_axes,
         )
     if fam == "hybrid":
         return ModelApi(
@@ -107,6 +116,7 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
                 p, b["tokens"], cfg, max_len, layout=layout(max_len)),
             decode_step=lambda p, t, c, **kw: hybrid.decode_step(
                 p, t, c, cfg, attn_backend=attn, **kw),
+            cache_seq_axes=hybrid.cache_seq_axes,
         )
     if fam == "encdec":
         return ModelApi(
@@ -118,6 +128,7 @@ def get_model(cfg: ModelConfig, attn_backend=None) -> ModelApi:
                 p, b, cfg, max_len, layout=layout(max_len)),
             decode_step=lambda p, t, c, **kw: encdec.decode_step(
                 p, t, c, cfg, attn_backend=attn, **kw),
+            cache_seq_axes=encdec.cache_seq_axes,
         )
     raise ValueError(fam)
 

@@ -347,3 +347,12 @@ def stage_decode_step(
     if spec.has_head:
         return _unembed_last(sp, x, cfg), new_cache
     return x, new_cache
+
+
+def cache_seq_axes(cache):
+    """Growing-KV sequence axes for the continuous-batching scheduler:
+    ``k``/``v`` page into the KV pool (seq axis -2), ``length`` stays
+    slot-resident.  See :func:`repro.models.kvcache.seq_axis_tree`."""
+    from repro.models.kvcache import seq_axis_tree
+
+    return seq_axis_tree(cache)

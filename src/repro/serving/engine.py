@@ -83,11 +83,17 @@ class ServingEngine:
         prompts: np.ndarray,            # [B, S_prompt] int32
         max_new_tokens: int = 8,
         extra: Optional[Dict[str, np.ndarray]] = None,
+        max_len: Optional[int] = None,
     ) -> GenerationResult:
+        """``max_len`` overrides the cache capacity (default: exactly what
+        the batch needs).  The continuous-batching differential suite pins
+        it to the scheduler's slot capacity so the solo oracle and the
+        scheduler run bitwise-identical reduction shapes."""
         B, S = prompts.shape
         if self.engine == "fabric":
             return self._generate_fabric(prompts, max_new_tokens, extra)
-        max_len = S + max_new_tokens + (self.cfg.frontend_tokens or 0)
+        if max_len is None:
+            max_len = S + max_new_tokens + (self.cfg.frontend_tokens or 0)
         batch: Dict[str, Any] = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if extra:
             batch.update({k: jnp.asarray(v) for k, v in extra.items()})
@@ -103,6 +109,68 @@ class ServingEngine:
             prefill_logits=np.asarray(logits[:, 0]),
             steps=max_new_tokens,
         )
+
+    def generate_stream(
+        self,
+        requests,                        # Sequence[scheduler.Request]
+        num_slots: int = 4,
+        max_request_len: Optional[int] = None,
+        mesh=None,
+        axis_name: str = "seq",
+    ):
+        """Serve a mixed-length request stream with continuous batching.
+
+        Requests are admitted into ``num_slots`` fixed decode slots as they
+        arrive and retired the step their token budget completes; KV lives
+        in a block-granular paged pool (``serving/kv_pool.py``) so slots are
+        reused defrag-free mid-decode.  Returns a list of
+        :class:`repro.serving.scheduler.RequestResult`, each bitwise-equal
+        (fp32 cache) to serving that request alone through :meth:`generate`
+        at ``max_len=slot_capacity``.
+
+        ``max_request_len`` bounds prompt+new+frontend over the stream
+        (default: measured from ``requests``); ``mesh`` switches the decode
+        step to the sequence-sharded shard_map variant over ``axis_name``.
+
+        The fabric engine has no mid-batch admission point (stage workers
+        hold per-batch KV), so it degrades to per-request static pipeline
+        generates behind the same API.
+        """
+        from repro.serving.scheduler import RequestScheduler
+
+        requests = list(requests)
+        if self.engine == "fabric":
+            return self._stream_fabric(requests)
+        if max_request_len is None:
+            max_request_len = max(
+                (np.asarray(r.prompt).reshape(-1).shape[0]
+                 + r.max_new_tokens + (self.cfg.frontend_tokens or 0))
+                for r in requests)
+        # The pool is sized exactly like route_serving_plan's policy, but
+        # from the engine's *own* backend layout (the plan re-routes the
+        # backend; an explicitly constructed engine must not switch).
+        layout = self.cache_layout(max_request_len)
+        cap = layout.padded_len(max_request_len)
+        sched = RequestScheduler(
+            self.model, self.params, self._prefill,
+            num_slots=num_slots, slot_capacity=cap, layout=layout,
+            mesh=mesh, axis_name=axis_name)
+        return sched.run(requests)
+
+    def _stream_fabric(self, requests):
+        from repro.serving.scheduler import RequestResult
+
+        results = []
+        for step, req in enumerate(sorted(requests,
+                                          key=lambda r: (r.arrival, r.rid))):
+            prompt = np.asarray(req.prompt, np.int32).reshape(1, -1)
+            res = self._generate_fabric(prompt, req.max_new_tokens, req.extra)
+            results.append(RequestResult(
+                rid=req.rid, tokens=res.tokens[0],
+                final_logits=res.prefill_logits[0],
+                prompt_len=prompt.shape[1],
+                admitted_step=step, finished_step=step))
+        return results
 
     def _generate_fabric(
         self,

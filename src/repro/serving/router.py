@@ -59,6 +59,44 @@ class DecodePlan:
 
 
 @dataclasses.dataclass
+class ServingPlan:
+    """A routed continuous-batching configuration for ``generate_stream``.
+
+    ``slot_capacity`` is the static per-slot KV capacity — the longest
+    request the stream may carry (prompt + new tokens + frontend), padded to
+    the routed backend's ``block_k``; every admission prefills at this
+    capacity so the jitted decode step's shapes never change.
+    ``num_blocks`` sizes the :class:`repro.serving.kv_pool.KVBlockPool` for
+    full slot occupancy plus the reserved null/sink pages."""
+
+    decode: DecodePlan
+    num_slots: int
+    slot_capacity: int
+    num_blocks: int
+
+    @property
+    def layout(self) -> KVCacheLayout:
+        return self.decode.layout_for(self.slot_capacity)
+
+
+def route_serving_plan(cfg: ModelConfig, max_request_len: int,
+                       num_slots: int = 4,
+                       platform: Optional[str] = None) -> ServingPlan:
+    """Slot/bucket policy for the continuous-batching scheduler: route the
+    decode backend for the capacity, pad the capacity to its block size, and
+    size the pool so ``num_slots`` maximal requests fit simultaneously."""
+    from repro.serving.kv_pool import RESERVED_BLOCKS
+
+    decode = route_decode_plan(cfg, max_len=max_request_len,
+                               platform=platform)
+    layout = decode.layout_for(max_request_len)
+    cap = layout.padded_len(max_request_len)
+    blocks = RESERVED_BLOCKS + num_slots * layout.blocks_for(cap)
+    return ServingPlan(decode=decode, num_slots=num_slots,
+                       slot_capacity=cap, num_blocks=blocks)
+
+
+@dataclasses.dataclass
 class TpuRoute:
     chips: int
     reason: str

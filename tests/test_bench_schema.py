@@ -122,6 +122,35 @@ class TestValidator:
                            "us_per_call": "", "note": "jax not installed"})
         assert validate(ok) == []
 
+    def test_serving_cb_row_rules(self):
+        ok = json.loads(json.dumps(self.BASE))
+        ok["rows"].extend([
+            {"name": "serving_cb_static_S2", "per_token_ms": 0.02,
+             "tokens_per_s": 50000.0},
+            {"name": "serving_cb_continuous_S2", "per_token_ms": 0.015,
+             "tokens_per_s": 66000.0, "beats_static": True},
+        ])
+        assert validate(ok) == []
+        bad = json.loads(json.dumps(self.BASE))
+        bad["rows"].append({"name": "serving_cb_static_S2",
+                            "per_token_ms": 0.02})
+        assert any("'tokens_per_s'" in p for p in validate(bad))
+        bad = json.loads(json.dumps(self.BASE))
+        bad["rows"].append({"name": "serving_cb_continuous_S2",
+                            "per_token_ms": 0.015, "tokens_per_s": 66000.0})
+        assert any("beats_static" in p for p in validate(bad))
+        # static rows carry no acceptance bit — nothing to demand of them
+        ok2 = json.loads(json.dumps(self.BASE))
+        ok2["rows"].append({"name": "serving_cb_static_S2",
+                            "per_token_ms": 0.02, "tokens_per_s": 50000.0})
+        assert validate(ok2) == []
+
+    def test_serving_cb_note_escape_hatch(self):
+        ok = json.loads(json.dumps(self.BASE))
+        ok["rows"].append({"name": "serving_cb_continuous_S2",
+                           "per_token_ms": "", "note": "jax not installed"})
+        assert validate(ok) == []
+
 
 class TestCommittedFusedRows:
     def test_sharded_fused_rows_recorded(self):
@@ -147,6 +176,24 @@ class TestCommittedFusedRows:
             assert isinstance(paper["budget_s"], (int, float))
             assert paper["within_budget"] is True
             assert paper["ulp_exact"] is True
+
+
+class TestCommittedServingCbRows:
+    def test_continuous_batching_beats_static_in_artifact(self):
+        """Acceptance (PR 8): the committed artifact carries both
+        ``serving_cb_*`` rows, and the continuous row's modeled sustained
+        throughput is strictly above the padded-static baseline at equal
+        slot count."""
+        rows = {r["name"]: r for r in _payload()["rows"]}
+        static = rows.get("serving_cb_static_S2")
+        cont = rows.get("serving_cb_continuous_S2")
+        assert static is not None, "no serving_cb_static_S2 row"
+        assert cont is not None, "no serving_cb_continuous_S2 row"
+        if static.get("note") or cont.get("note"):
+            return  # "" + note = jax unavailable on the bench host
+        assert cont["beats_static"] is True
+        assert cont["tokens_per_s"] > static["tokens_per_s"]
+        assert cont["per_token_ms"] < static["per_token_ms"]
 
 
 class TestBenchDelta:

@@ -167,6 +167,28 @@ class TestPipelineParity:
         assert got.fabric.metrics["phased_makespan_s"] >= \
             got.fabric.metrics["overlap_makespan_s"]
 
+    def test_engine_fabric_stream_fallback(self, served):
+        """The fabric engine has no mid-batch admission point (stage
+        workers hold per-batch KV), so ``generate_stream`` degrades to
+        per-request static pipeline generates behind the same API — each
+        result must match its own per-request fabric ``generate``."""
+        from repro.serving.scheduler import Request
+
+        cfg, prompts, engine, _, _ = served["internlm2-1.8b"]
+        fab = ServingEngine(cfg, params=engine.params, engine="fabric",
+                            pipeline_P=2, pipeline_channel="queue")
+        reqs = [Request(rid=i, prompt=prompts[i, :3 + i],
+                        max_new_tokens=1 + i)
+                for i in range(prompts.shape[0])]
+        results = {r.rid: r for r in fab.generate_stream(reqs)}
+        assert set(results) == {r.rid for r in reqs}
+        for req in reqs:
+            solo = fab.generate(np.asarray(req.prompt)[None],
+                                max_new_tokens=req.max_new_tokens)
+            np.testing.assert_array_equal(results[req.rid].tokens,
+                                          solo.tokens[0])
+            assert results[req.rid].prompt_len == req.prompt.shape[0]
+
     def test_unknown_engine_rejected(self, served):
         cfg, _, engine, _, _ = served["internlm2-1.8b"]
         with pytest.raises(ValueError):

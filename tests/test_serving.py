@@ -5,7 +5,9 @@ import pytest
 
 from repro.configs import SHAPES, get_config
 from repro.serving.engine import ServingEngine
-from repro.serving.router import route_serverless, route_tpu
+from repro.serving.router import (
+    route_serverless, route_serving_plan, route_tpu)
+from repro.serving.scheduler import Request
 
 
 class TestEngine:
@@ -43,6 +45,57 @@ class TestEngine:
         assert out.tokens.shape == (2, 3)
 
 
+class TestMixedLengthBatch:
+    """The shared-``cache_len`` gap (known since PR 4), test-first.
+
+    The static ``generate`` pads every prompt in a batch to one length and
+    tracks ONE ``length`` scalar for the whole batch, so a short request's
+    valid prefix is polluted by its padding — its tokens cannot match the
+    same request served alone.  The continuous-batching scheduler gives
+    every slot its own length and closes the gap bitwise.
+    """
+
+    def _ragged(self, cfg, rng):
+        short = rng.integers(0, cfg.vocab_size, size=(3,)).astype(np.int32)
+        long = rng.integers(0, cfg.vocab_size, size=(9,)).astype(np.int32)
+        return short, long
+
+    @pytest.mark.xfail(
+        strict=True,
+        reason="static generate shares one cache_len across the batch: a "
+               "padded short prompt attends over its padding (PR 4 gap); "
+               "served per-request by the scheduler instead")
+    def test_static_batch_pads_short_requests_wrong(self):
+        cfg = get_config("internlm2-1.8b").reduced()
+        engine = ServingEngine(cfg, seed=0)
+        rng = np.random.default_rng(5)
+        short, long = self._ragged(cfg, rng)
+        # the only way the static API takes ragged prompts: pad to a bucket
+        batch = np.stack([np.pad(short, (0, long.size - short.size)), long])
+        got = engine.generate(batch, max_new_tokens=4)
+        solo = engine.generate(short[None], max_new_tokens=4,
+                               max_len=long.size + 4)
+        np.testing.assert_array_equal(got.tokens[0], solo.tokens[0])
+
+    def test_scheduler_serves_ragged_prefixes_bitwise(self):
+        cfg = get_config("internlm2-1.8b").reduced()
+        engine = ServingEngine(cfg, seed=0)
+        rng = np.random.default_rng(5)
+        short, long = self._ragged(cfg, rng)
+        reqs = [Request(rid=0, prompt=short, max_new_tokens=4),
+                Request(rid=1, prompt=long, max_new_tokens=4)]
+        results = {r.rid: r for r in engine.generate_stream(reqs,
+                                                            num_slots=2)}
+        cap = engine.cache_layout(13).padded_len(13)   # 9 + 4
+        for rid, prompt in ((0, short), (1, long)):
+            solo = engine.generate(prompt[None], max_new_tokens=4,
+                                   max_len=cap)
+            np.testing.assert_array_equal(results[rid].tokens,
+                                          solo.tokens[0])
+            assert np.array_equal(results[rid].final_logits,
+                                  solo.prefill_logits[0])
+
+
 class TestRouter:
     def test_serverless_progression(self):
         """§IV-C: serial → queue → object as the workload grows."""
@@ -64,3 +117,20 @@ class TestRouter:
         model of similar size at long context."""
         ssm = route_tpu(get_config("mamba2-370m"), SHAPES["long_500k"])
         assert ssm.chips <= 4
+
+    def test_serving_plan_sizes_pool_for_full_occupancy(self):
+        from repro.serving.kv_pool import RESERVED_BLOCKS
+
+        cfg = get_config("internlm2-1.8b").reduced()
+        plan = route_serving_plan(cfg, max_request_len=100, num_slots=4,
+                                  platform="cpu")
+        layout = plan.layout
+        assert plan.slot_capacity % max(1, layout.block_k) == 0
+        assert plan.slot_capacity >= 100
+        per_slot = layout.blocks_for(plan.slot_capacity)
+        assert plan.num_blocks == RESERVED_BLOCKS + 4 * per_slot
+        # TPU routing picks the splitk kernel, whose block_k pads capacity
+        tpu = route_serving_plan(cfg, max_request_len=100, num_slots=4,
+                                 platform="tpu")
+        assert tpu.decode.attn_backend == "pallas-splitk"
+        assert tpu.slot_capacity % tpu.layout.block_k == 0
