@@ -10,7 +10,10 @@ and excluded unless rows are named explicitly via ``--rows``.
 
 A named row missing from the *baseline* is skipped (new row, no trend yet);
 missing from the *fresh* file it fails — a silently dropped benchmark is a
-broken trajectory.
+broken trajectory.  Placeholder timings (``""`` + note) are never silently
+dropped either: a placeholder *baseline* is a loud ``SKIP`` on stderr, and a
+numeric baseline whose *fresh* twin lost its numeric timing fails — a gated
+benchmark going dark is indistinguishable from a regression.
 
 A baseline whose ``meta.schema_version`` is missing or older than
 ``benchmarks.check_schema.SCHEMA_VERSION`` fails loudly (exit 2): a stale
@@ -42,6 +45,10 @@ from benchmarks.check_schema import SCHEMA_VERSION
 # per_token_ms across both channels and stage counts.
 # The ``serving_cb_*`` rows gate continuous-batching scheduling efficiency:
 # modeled per_token_ms from decode slot-step counts, static vs continuous.
+# The ``fsi_*_eager_*`` rows gate eager-polling's billed per_sample_ms (with
+# the lazy and phased clocks alongside), ``fsi_warm_P8`` the warm-pool run
+# (its pre-request GB-seconds billed on warm_pool_usd), and
+# ``lm_pipeline_auto_*`` the per-boundary channel autotuner.
 DEFAULT_ROWS = (
     "fsi_serial",
     "fsi_queue_P2",
@@ -64,6 +71,15 @@ DEFAULT_ROWS = (
     "lm_pipeline_object_P4",
     "serving_cb_static_S2",
     "serving_cb_continuous_S2",
+    "fsi_queue_eager_P2",
+    "fsi_queue_eager_P4",
+    "fsi_queue_eager_P8",
+    "fsi_object_eager_P2",
+    "fsi_object_eager_P4",
+    "fsi_object_eager_P8",
+    "fsi_warm_P8",
+    "lm_pipeline_auto_P2",
+    "lm_pipeline_auto_P4",
 )
 
 TIMING_FIELDS = ("per_sample_ms", "per_token_ms", "us_per_call")
@@ -78,8 +94,15 @@ def _timing(row: dict):
 
 
 def compare(baseline: dict, fresh: dict, rows: Sequence[str] = DEFAULT_ROWS,
-            threshold: float = 0.2) -> List[str]:
-    """Returns human-readable problems (empty == within budget)."""
+            threshold: float = 0.2,
+            skipped: List[str] = None) -> List[str]:
+    """Returns human-readable problems (empty == within budget).
+
+    Non-numeric timing in a gated row is never silently dropped: a
+    placeholder *baseline* (``""`` + note, the dependency-unavailable
+    convention) is a loud skip via ``skipped``; a numeric baseline whose
+    *fresh* twin lost its numeric timing is a problem — a gated benchmark
+    that went dark is indistinguishable from a regression."""
     base_rows: Dict[str, dict] = {r.get("name"): r
                                   for r in baseline.get("rows", [])}
     new_rows: Dict[str, dict] = {r.get("name"): r
@@ -96,8 +119,21 @@ def compare(baseline: dict, fresh: dict, rows: Sequence[str] = DEFAULT_ROWS,
             continue
         bf, bv = _timing(base)
         nf, nv = _timing(new)
-        if bv is None or nv is None:
-            continue  # e.g. "" + note rows (dependency unavailable)
+        if bv is None:
+            if skipped is not None:
+                skipped.append(
+                    f"{name}: baseline timing is a placeholder "
+                    f"(note: {base.get('note') or 'none'}) — no trend to "
+                    f"gate against")
+            continue
+        if nv is None:
+            note = new.get("note")
+            problems.append(
+                f"{name}: baseline {bf}={bv:.4g} is numeric but the fresh "
+                f"row carries no numeric timing"
+                + (f" (note: {note})" if note else "")
+                + " — gated benchmark went dark")
+            continue
         if bv > 0 and nv > bv * (1.0 + threshold):
             problems.append(
                 f"{name}: {nf} regressed {nv:.4g} vs baseline {bv:.4g} "
@@ -134,8 +170,11 @@ def main(argv=None) -> int:
             file=sys.stderr)
         return 2
     rows = tuple(args.rows.split(",")) if args.rows else DEFAULT_ROWS
+    skipped: List[str] = []
     problems = compare(payloads[0], payloads[1], rows=rows,
-                       threshold=args.threshold)
+                       threshold=args.threshold, skipped=skipped)
+    for s in skipped:
+        print(f"bench-delta: SKIP {s}", file=sys.stderr)
     for p in problems:
         print(f"bench-delta: {p}", file=sys.stderr)
     if not problems:

@@ -46,6 +46,16 @@ And the continuous-batching serving path (PR 8):
   along informationally, and the continuous row's ``beats_static`` bit
   records the strict win.
 
+And the per-layer-hop attack (PR 9):
+
+* ``fsi_{queue,object}_eager_P{2,4,8}`` rows compare eager ledger polling
+  (the new default) against the PR 6 blocked-reader ledger and the phased
+  oracle — three billed clocks per row, charge counts bit-identical;
+* ``fsi_warm_P8`` runs the warm-pool provisioning policy, with the
+  pre-request GB-seconds billed explicitly in ``warm_pool_usd``;
+* ``lm_pipeline_auto_P{2,4}`` rows run the per-boundary channel autotuner
+  (``channel="auto"``) and record the chosen plan string.
+
 And the sequence-sharded decode path (PR 4):
 
 * ``decode_sharded_*`` rows time one split-KV decode step — shard-local
@@ -160,6 +170,139 @@ def bench_overlap(net, x0, oracle, workers=(2, 4, 8)) -> List[dict]:
                 comms_usd=r_ov.cost.communication,
                 wall_s=round(wall, 4), wall_ms=round(wall * 1e3, 2),
             ))
+    return rows
+
+
+def bench_eager_warm(net, x0, oracle, workers=(2, 4, 8)) -> List[dict]:
+    """Eager polling and warm-pool provisioning vs their off switches (PR 9).
+
+    ``fsi_{channel}_eager_P{P}`` rows run ``run_fsi`` three ways — eager
+    ledger polling (the default), ``eager_poll=False`` (the PR 6 blocked-
+    reader ledger), and the strict-sum phased oracle — and record all three
+    billed times plus ``counters_identical``: every charge count and the
+    phased makespan bit-identical between eager and lazy, as the ledger-only
+    re-timing guarantees.  ``fsi_warm_P8`` runs the warm-pool policy (fleet
+    pre-invoked, weights pre-loaded before the request epoch) and surfaces
+    the explicit pre-request GB-seconds bill in ``warm_pool_usd``."""
+    rows: List[dict] = []
+    batch = x0.shape[1]
+    count_stats = ("publish_units", "bytes_sns_to_sqs", "sqs_api_calls",
+                   "s3_puts", "s3_gets", "s3_lists")
+
+    def counts_identical(a, b) -> bool:
+        return (all(getattr(a.stats, f) == getattr(b.stats, f)
+                    for f in count_stats)
+                and a.wire_exchange_bytes == b.wire_exchange_bytes
+                and a.raw_exchange_bytes == b.raw_exchange_bytes
+                and a.metrics["phased_makespan_s"]
+                == b.metrics["phased_makespan_s"])
+
+    for P in workers:
+        for ch in ("queue", "object"):
+            t0 = time.perf_counter()
+            r_eager = run_fsi(net, x0, P=P, channel=ch, memory_mb=4000)
+            r_lazy = run_fsi(net, x0, P=P, channel=ch, memory_mb=4000,
+                             eager_poll=False)
+            wall = time.perf_counter() - t0
+            assert np.allclose(r_eager.output, oracle, rtol=1e-4, atol=1e-4)
+            rows.append(dict(
+                name=f"fsi_{ch}_eager_P{P}", P=P,
+                per_sample_ms=r_eager.per_sample_ms(batch),
+                lazy_per_sample_ms=r_lazy.per_sample_ms(batch),
+                phased_per_sample_ms=(
+                    r_eager.metrics["phased_makespan_s"] / batch * 1e3),
+                speedup_vs_lazy=round(r_lazy.makespan / r_eager.makespan, 3),
+                counters_identical=counts_identical(r_eager, r_lazy),
+                cost_usd=r_eager.cost.total,
+                comms_usd=r_eager.cost.communication,
+                wall_s=round(wall, 4), wall_ms=round(wall * 1e3, 2),
+            ))
+
+    P = max(workers)
+    t0 = time.perf_counter()
+    r_warm = run_fsi(net, x0, P=P, channel="queue", memory_mb=4000,
+                     warm_pool=True)
+    r_warm_ph = run_fsi(net, x0, P=P, channel="queue", memory_mb=4000,
+                        warm_pool=True, overlap=False)
+    wall = time.perf_counter() - t0
+    assert np.allclose(r_warm.output, oracle, rtol=1e-4, atol=1e-4)
+    rows.append(dict(
+        name=f"fsi_warm_P{P}", P=P,
+        per_sample_ms=r_warm.per_sample_ms(batch),
+        phased_per_sample_ms=r_warm_ph.per_sample_ms(batch),
+        warm_pool_usd=r_warm.cost.warm_pool,
+        warm_pool_provision_s=r_warm.metrics["warm_pool_provision_s"],
+        counters_identical=bool(
+            counts_identical(r_warm, r_warm_ph)
+            and r_warm.metrics == r_warm_ph.metrics),
+        cost_usd=r_warm.cost.total,
+        comms_usd=r_warm.cost.communication,
+        wall_s=round(wall, 4), wall_ms=round(wall * 1e3, 2),
+    ))
+    return rows
+
+
+def bench_lm_pipeline_auto(arch: str = "internlm2-1.8b", workers=(2, 4),
+                           batch: int = 2, prompt_len: int = 12,
+                           max_new: int = 4) -> List[dict]:
+    """Per-boundary channel autotune over the LM stage pipeline (PR 9).
+
+    ``lm_pipeline_auto_P{P}`` rows run ``run_lm_pipeline(channel="auto")``
+    — queue vs object chosen per stage boundary (and for the token
+    loopback) from ``activation_hop_cost`` over the boundary's activation
+    bytes — against the phased oracle, recording the standard LM-pipeline
+    contract plus the chosen plan string."""
+    try:
+        import jax  # noqa: F401
+    except ModuleNotFoundError:
+        return [dict(name=f"lm_pipeline_auto_P{P}", us_per_call="",
+                     note="jax not installed")
+                for P in workers]
+
+    from repro.configs.base import get_config
+    from repro.faas.lm_pipeline import build_stage_executors, run_lm_pipeline
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config(arch).reduced()
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len),
+                           dtype=np.int32)
+    engine = ServingEngine(cfg, seed=0)
+    ref = engine.generate(prompts, max_new_tokens=max_new)
+    count_stats = ("publish_units", "bytes_sns_to_sqs", "sqs_api_calls",
+                   "s3_puts", "s3_gets", "s3_lists")
+    rows: List[dict] = []
+    for P in workers:
+        executors = build_stage_executors(cfg, engine.params, P)
+        t0 = time.perf_counter()
+        r_ov = run_lm_pipeline(cfg, prompts, engine.params,
+                               max_new_tokens=max_new, P=P, channel="auto",
+                               executors=executors, overlap=True)
+        r_ph = run_lm_pipeline(cfg, prompts, engine.params,
+                               max_new_tokens=max_new, P=P, channel="auto",
+                               executors=executors, overlap=False)
+        wall = time.perf_counter() - t0
+        assert np.array_equal(r_ov.tokens, ref.tokens)
+        identical = (
+            all(getattr(r_ov.stats, f) == getattr(r_ph.stats, f)
+                for f in count_stats)
+            and r_ov.wire_exchange_bytes == r_ph.wire_exchange_bytes
+            and r_ov.raw_exchange_bytes == r_ph.raw_exchange_bytes
+            and r_ov.metrics["chosen_channel_plan"]
+            == r_ph.metrics["chosen_channel_plan"]
+        )
+        rows.append(dict(
+            name=f"lm_pipeline_auto_P{P}", P=P, arch=cfg.name,
+            per_token_ms=r_ov.per_token_ms,
+            phased_per_token_ms=r_ph.per_token_ms,
+            usd_per_1k_tokens=r_ov.usd_per_1k_tokens,
+            counters_identical=bool(identical),
+            chosen_channel_plan=r_ov.metrics["chosen_channel_plan"],
+            speedup_vs_phased=round(r_ph.makespan / r_ov.makespan, 3),
+            cost_usd=r_ov.cost.total,
+            comms_usd=r_ov.cost.communication,
+            wall_s=round(wall, 4), wall_ms=round(wall * 1e3, 2),
+        ))
     return rows
 
 
@@ -539,7 +682,10 @@ def run(neurons=512, layers=24, batch=64, workers=(2, 4, 8, 16),
                 wall_ms=round(wall * 1e3, 2),
             ))
     rows.extend(bench_overlap(net, x0, oracle))
+    rows.extend(bench_eager_warm(net, x0, oracle,
+                                 workers=tuple(p for p in workers if p <= 8)))
     rows.extend(bench_lm_pipeline())
+    rows.extend(bench_lm_pipeline_auto())
     rows.extend(bench_serving_cb())
     rows.extend(bench_backends(net, x0, oracle, P=max(workers),
                                backends=backends))

@@ -30,7 +30,16 @@ must fail CI instead of silently corrupting the trend.  Rules:
   decode slot-step counts — deterministic and gated), and the
   ``serving_cb_continuous_*`` row must carry a boolean ``beats_static`` —
   the acceptance bit asserting continuous sustained throughput strictly
-  above the padded-static baseline at equal slot count.
+  above the padded-static baseline at equal slot count;
+* ``fsi_*_eager_*`` rows (eager-polling sweep, PR 9) must carry numeric
+  ``per_sample_ms``, ``lazy_per_sample_ms`` and ``phased_per_sample_ms``
+  plus the boolean ``counters_identical`` oracle bit;
+* ``fsi_warm_*`` rows (warm-pool provisioning) must carry numeric
+  ``warm_pool_usd`` — the explicit pre-request GB-seconds line — plus
+  ``counters_identical``;
+* ``lm_pipeline_auto_*`` rows (per-boundary channel autotune) must carry a
+  non-empty string ``chosen_channel_plan`` on top of the standard
+  ``lm_pipeline_*`` contract.
 
 ``SCHEMA_VERSION`` stamps the artifact (written into ``meta`` by
 ``benchmarks.run --json``): bump it whenever a rule above changes shape, so
@@ -50,7 +59,10 @@ from typing import List
 
 # v2: lm_pipeline_* rows + per_token_ms timing column (PR 7)
 # v3: serving_cb_* rows — continuous-batching throughput gate (PR 8)
-SCHEMA_VERSION = 3
+# v4: fsi_*_eager_* / fsi_warm_* / lm_pipeline_auto_* rows — eager polling,
+#     warm-pool billing (warm_pool_usd) and channel autotune
+#     (chosen_channel_plan) gates (PR 9)
+SCHEMA_VERSION = 4
 
 TIMING_FIELDS = ("us_per_call", "per_sample_ms", "per_token_ms")
 TIMED_PREFIXES = ("spmm_roofline_", "decode_attn_", "decode_sharded_",
@@ -115,6 +127,33 @@ def validate(payload) -> List[str]:
                 problems.append(
                     f"{where} ({name}): overlap row without boolean "
                     f"'counters_identical'")
+        if name.startswith("fsi_") and "_eager_" in name:
+            for f in ("per_sample_ms", "lazy_per_sample_ms",
+                      "phased_per_sample_ms"):
+                v = row.get(f)
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    problems.append(
+                        f"{where} ({name}): eager row without numeric {f!r}")
+            if not isinstance(row.get("counters_identical"), bool):
+                problems.append(
+                    f"{where} ({name}): eager row without boolean "
+                    f"'counters_identical'")
+        if name.startswith("fsi_warm_"):
+            v = row.get("warm_pool_usd")
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                problems.append(
+                    f"{where} ({name}): warm-pool row without numeric "
+                    f"'warm_pool_usd'")
+            if not isinstance(row.get("counters_identical"), bool):
+                problems.append(
+                    f"{where} ({name}): warm-pool row without boolean "
+                    f"'counters_identical'")
+        if name.startswith("lm_pipeline_auto_") and not row.get("note"):
+            v = row.get("chosen_channel_plan")
+            if not isinstance(v, str) or not v:
+                problems.append(
+                    f"{where} ({name}): autotune row without non-empty "
+                    f"string 'chosen_channel_plan'")
         if name.startswith("lm_pipeline_") and not row.get("note"):
             for f in ("per_token_ms", "phased_per_token_ms",
                       "usd_per_1k_tokens"):

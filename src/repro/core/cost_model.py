@@ -34,6 +34,7 @@ __all__ = [
     "queue_cost",
     "object_cost",
     "serial_cost",
+    "warm_pool_cost",
     "activation_hop_cost",
     "recommend_configuration",
     "TpuCostConstants",
@@ -88,15 +89,20 @@ class WorkloadStats:
 class CostBreakdown:
     compute: float
     communication: float
+    # Pre-request provisioning $ under the warm-pool policy (GB-seconds from
+    # each worker's invocation through pool-hot).  Zero for on-demand runs,
+    # so the field is invisible to every existing cost comparison.
+    warm_pool: float = 0.0
 
     @property
     def total(self) -> float:
-        return self.compute + self.communication
+        return self.compute + self.communication + self.warm_pool
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        warm = f", warm=${self.warm_pool:.4f}" if self.warm_pool else ""
         return (
             f"CostBreakdown(comp=${self.compute:.4f}, "
-            f"comms=${self.communication:.4f}, total=${self.total:.4f})"
+            f"comms=${self.communication:.4f}{warm}, total=${self.total:.4f})"
         )
 
 
@@ -136,6 +142,17 @@ def serial_cost(
 ) -> CostBreakdown:
     """Eq. 3."""
     return CostBreakdown(compute=lambda_cost(stats, pricing), communication=0.0)
+
+
+def warm_pool_cost(
+    provision_seconds, memory_mb: int,
+    pricing: PricingConstants = AWS_PRICING,
+) -> float:
+    """Pre-request $ of a warm pool: each worker's billed runtime from its
+    invocation through pool-hot (``warm_pool_schedule``'s ``provision_s``),
+    priced as ordinary Lambda GB-seconds.  Invocations themselves are billed
+    once in :func:`lambda_cost` — pre-invoking merely moves them earlier."""
+    return float(sum(provision_seconds)) * memory_mb * pricing.lambda_mb_second
 
 
 def billed_publish_units(payload_bytes: int, pricing: PricingConstants = AWS_PRICING) -> int:

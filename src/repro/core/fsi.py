@@ -539,8 +539,12 @@ def _queue_drain_one(
                 # receiver thread: the chunk is in hand at its service-side
                 # availability on the sender's ledger; only the decode cost
                 # occupies the channel timeline (deletes are fire-and-forget
-                # trailing work, off the critical path)
-                avail = d.ledger_at if d.ledger_at is not None else d.deliver_at
+                # trailing work, off the critical path).  Under eager polling
+                # the receive gates on the eager stamp (the poll was already
+                # parked when the publish landed).
+                avail = worker.ledger.recv_available(
+                    d.ledger_at if d.ledger_at is not None else d.deliver_at,
+                    d.ledger_eager_at)
                 worker.ledger.receive(avail, unpack_s)
             worker.messages_received += 1
             worker.bytes_received += len(d.blob)
@@ -713,6 +717,9 @@ def _object_drain_one(
             seen.add(h.key)
             led_avail = (h.ledger_visible_at if h.ledger_visible_at is not None
                          else h.visible_at)
+            if worker.ledger is not None:
+                led_avail = worker.ledger.recv_available(
+                    led_avail, h.ledger_eager_visible_at)
             if h.is_nul:
                 if worker.ledger is not None:
                     # the reader must still observe the marker appear

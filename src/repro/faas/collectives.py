@@ -41,11 +41,32 @@ __all__ = ["barrier", "reduce_to_root", "broadcast", "all_reduce"]
 _TOKEN_BYTES = 64
 
 
-def _edge_cost(fabric) -> float:
-    """One-hop message time over the fabric."""
+def _edge_cost(fabric, eager: bool = False) -> float:
+    """One-hop message time over the fabric.
+
+    ``eager=True`` gives the ledger-side hop under eager polling: the
+    receiver's long-poll / LIST is already parked when the send starts, so
+    only the one-way publish half-trip and the push half of the poll RTT
+    serialize (queue), or the one-way PUT half-trip before the in-flight
+    LIST can observe the object (object).  Phased timing and billing always
+    use the blocked-reader cost."""
     if isinstance(fabric, QueueFabric):
+        if eager:
+            return (fabric.publish_latency / 2 + fabric.fanout_latency
+                    + fabric.poll_rtt / 2)
         return fabric.publish_latency + fabric.fanout_latency + fabric.poll_rtt
+    if eager:
+        return (fabric.put_latency / 2 + fabric.list_latency
+                + fabric.get_first_byte)
     return fabric.put_latency + fabric.list_latency + fabric.get_first_byte
+
+
+def _ledger_edge_cost(fabric, workers: Sequence[WorkerState]) -> float:
+    """Edge cost on the ledger timelines: eager iff every ledger-carrying
+    worker polls eagerly (the fleet shares one polling policy)."""
+    eager = any(w.ledger is not None for w in workers) and all(
+        w.ledger.eager_poll for w in workers if w.ledger is not None)
+    return _edge_cost(fabric, eager=eager)
 
 
 def _chunks(data: bytes, cap: int) -> List[Chunk]:
@@ -132,6 +153,7 @@ def barrier(
     """Tree up-sweep + down-sweep; on return every worker clock is aligned."""
     P = len(workers)
     edge = _edge_cost(fabric)
+    edge_led = _ledger_edge_cost(fabric, workers)
     # up-sweep: completion time at each node (phased and ledger timelines)
     up = [0.0] * P
     up_led = [0.0] * P
@@ -141,7 +163,7 @@ def barrier(
         kids = tree.children(m)
         for c in kids:
             t = max(t, up[c] + edge)
-            tl = max(tl, up_led[c] + edge)
+            tl = max(tl, up_led[c] + edge_led)
         if kids:
             if aggregate:
                 _bill_sends(fabric, layer_tag, [(c, m, None) for c in kids])
@@ -168,7 +190,7 @@ def barrier(
                     _bill_edge(fabric, layer_tag, m, c, None)
         for c in kids:
             release[c] = release[m] + edge
-            release_led[c] = release_led[m] + edge
+            release_led[c] = release_led[m] + edge_led
     for m, w in enumerate(workers):
         w.advance_to_abs(release[m])
         if w.ledger is not None:
@@ -203,6 +225,7 @@ def reduce_to_root(
     """
     P = len(workers)
     edge = _edge_cost(fabric)
+    edge_led = _ledger_edge_cost(fabric, workers)
     bw = _bandwidth(fabric)
     # accumulate (rank, panel) pairs so the root can restore rank order no
     # matter how the tree interleaved the subtrees
@@ -217,7 +240,7 @@ def reduce_to_root(
             blob = b"".join(np.ascontiguousarray(a).tobytes()
                             for _, a in acc[c])
             t = max(t, done[c] + edge + len(blob) / bw)
-            tl = max(tl, done_led[c] + edge + len(blob) / bw)
+            tl = max(tl, done_led[c] + edge_led + len(blob) / bw)
             step_edges.append((c, m, blob))
             acc[m].extend(acc[c])
         if step_edges:
@@ -233,9 +256,10 @@ def reduce_to_root(
         # a non-root worker finishes once its panel is handed up the tree
         for m, w in enumerate(workers):
             hop = edge if m != 0 else 0.0
+            hop_led = edge_led if m != 0 else 0.0
             w.advance_to_abs(done[m] + hop)
             if w.ledger is not None:
-                w.ledger.sync_to(done_led[m] + hop)
+                w.ledger.sync_to(done_led[m] + hop_led)
     else:
         workers[0].advance_to_abs(done[0])
         if workers[0].ledger is not None:
@@ -256,6 +280,7 @@ def broadcast(
 ) -> None:
     P = len(workers)
     edge = _edge_cost(fabric)
+    edge_led = _ledger_edge_cost(fabric, workers)
     blob = np.ascontiguousarray(payload).tobytes()
     t = [0.0] * P
     t_led = [0.0] * P
@@ -273,7 +298,7 @@ def broadcast(
                     _bill_edge(fabric, layer_tag, m, c, blob)
         for c in kids:
             t[c] = t[m] + edge + len(blob) / _bandwidth(fabric)
-            t_led[c] = t_led[m] + edge + len(blob) / _bandwidth(fabric)
+            t_led[c] = t_led[m] + edge_led + len(blob) / _bandwidth(fabric)
     for m, w in enumerate(workers):
         w.advance_to_abs(t[m])
         if w.ledger is not None:

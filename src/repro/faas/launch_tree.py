@@ -14,12 +14,13 @@ the comparison helpers reproduce that claim as a benchmark.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 __all__ = ["TreeSpec", "children_of", "parent_of", "launch_schedule",
-           "central_launch_schedule", "two_level_launch_schedule"]
+           "warm_pool_schedule", "central_launch_schedule",
+           "two_level_launch_schedule"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +55,24 @@ def parent_of(m: int, B: int) -> int:
     return (m - 1) // B
 
 
+def _tree_schedule(
+    P: int, branching: int, invoke_latency: float, cold_start: float,
+    jitter: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(invoked_at, ready) for the hierarchical tree launch with per-worker
+    cold-start jitter already drawn."""
+    invoked = np.zeros(P)
+    ready = np.zeros(P)
+    ready[0] = cold_start + jitter[0]
+    # BFS in heap order is already topological: parent < child index-wise
+    for m in range(P):
+        t = ready[m]
+        for i, c in enumerate(children_of(m, P, branching)):
+            invoked[c] = t + (i + 1) * invoke_latency
+            ready[c] = invoked[c] + cold_start + jitter[c]
+    return invoked, ready
+
+
 def launch_schedule(
     P: int,
     branching: int = 4,
@@ -61,6 +80,7 @@ def launch_schedule(
     cold_start: float = 0.250,
     cold_start_jitter: float = 0.0,
     seed: int = 0,
+    rng: Optional[np.random.Generator] = None,
 ) -> np.ndarray:
     """Ready time of every worker under the hierarchical tree launch.
 
@@ -68,19 +88,50 @@ def launch_schedule(
     child invocations sequentially (each costs `invoke_latency` of its own
     time) before starting compute — matching the paper's design where
     invoking the sub-tree is 'a precursor to executing its compute role'.
+
+    Jitter draws come from ``rng`` when given (``SimulatorConfig`` threads
+    its launch stream here), else from a generator seeded with ``seed`` —
+    either way the schedule is a pure function of its inputs.
     """
-    rng = np.random.default_rng(seed)
+    if rng is None:
+        rng = np.random.default_rng(seed)
     jitter = rng.random(P) * cold_start_jitter
-    ready = np.zeros(P)
-    ready[0] = cold_start + jitter[0]
-    order = sorted(range(P), key=lambda m: ready[m])
-    # BFS in heap order is already topological: parent < child index-wise
-    for m in range(P):
-        t = ready[m]
-        for i, c in enumerate(children_of(m, P, branching)):
-            invoked_at = t + (i + 1) * invoke_latency
-            ready[c] = invoked_at + cold_start + jitter[c]
+    _, ready = _tree_schedule(P, branching, invoke_latency, cold_start, jitter)
     return ready
+
+
+def warm_pool_schedule(
+    P: int,
+    branching: int = 4,
+    invoke_latency: float = 0.050,
+    cold_start: float = 0.250,
+    cold_start_jitter: float = 0.0,
+    seed: int = 0,
+    rng: Optional[np.random.Generator] = None,
+    weight_load_s: float | np.ndarray = 0.0,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Warm-pool policy: the same tree launch cascade runs BEFORE the request
+    arrives, and every worker pre-loads its weight shard; the pool is
+    declared hot when the last worker finishes, and the request epoch is
+    re-based to that instant.
+
+    Returns ``(ready, provision_s)``: ``ready`` is all-zeros (every worker is
+    idle-hot at the request epoch) and ``provision_s[m]`` is worker ``m``'s
+    billed pre-request runtime — from its invocation (Lambda bills init
+    duration) through pool-hot — the input to
+    :func:`repro.core.cost_model.warm_pool_cost`.  Same jitter stream as
+    :func:`launch_schedule`, so warm and on-demand runs of one seed draw
+    identical cold starts.
+    """
+    if rng is None:
+        rng = np.random.default_rng(seed)
+    jitter = rng.random(P) * cold_start_jitter
+    invoked, ready = _tree_schedule(P, branching, invoke_latency, cold_start,
+                                    jitter)
+    loaded = ready + np.broadcast_to(np.asarray(weight_load_s, float), (P,))
+    pool_hot = float(loaded.max())
+    provision_s = pool_hot - invoked
+    return np.zeros(P), provision_s
 
 
 def central_launch_schedule(

@@ -40,6 +40,7 @@ from repro.core.cost_model import (
     PricingConstants,
     WorkloadStats,
     activation_hop_cost,
+    lambda_cost,
     object_cost,
     queue_cost,
 )
@@ -65,7 +66,7 @@ from repro.faas.worker import (
 __all__ = ["LmPipelineResult", "build_stage_executors", "run_lm_pipeline",
            "stage_layer_costs"]
 
-Channel = Literal["queue", "object"]
+Channel = Literal["queue", "object", "auto"]
 
 _MAX_OBJECT_PART = 8 * 1024 * 1024  # matches the FSI object send path
 
@@ -266,6 +267,7 @@ def run_lm_pipeline(
     branching: int = 4,
     seed: int = 0,
     overlap: bool = True,
+    eager_poll: bool = True,
     extra: Optional[Dict[str, np.ndarray]] = None,
     executors: Optional[List[ModelStageWorker]] = None,
     fabric=None,
@@ -276,8 +278,14 @@ def run_lm_pipeline(
     ``executors`` — prebuilt :func:`build_stage_executors` output to reuse
     jit caches across runs (caches are reset here).  ``fabric`` — inject a
     fabric instance (fault-model subclasses in tests); must be built for P
-    workers on the matching channel.  ``overlap`` selects the reported clock
-    exactly as in ``run_fsi``; both makespans are always in ``metrics``.
+    workers on the matching channel (incompatible with ``channel="auto"``).
+    ``overlap`` selects the reported clock exactly as in ``run_fsi``; both
+    makespans are always in ``metrics``.  ``eager_poll`` re-times ledger
+    receives as if each stage's long-poll / LIST loop were already parked
+    when the upstream publish landed — ledger-only, billing unchanged.
+    ``channel="auto"`` picks queue vs object per stage boundary (and for the
+    token loopback) from ``activation_hop_cost`` over the boundary's actual
+    activation bytes; the plan lands in ``metrics["chosen_channel_plan"]``.
     """
     import jax
     import jax.numpy as jnp
@@ -314,7 +322,8 @@ def run_lm_pipeline(
     for m in range(P):
         w = WorkerState(rank=m, memory_mb=memory_mb, start_time=float(ready[m]),
                         ledger=EventLedger(t_compute=float(ready[m]),
-                                           t_channel=float(ready[m])))
+                                           t_channel=float(ready[m]),
+                                           eager_poll=eager_poll))
         # stage cold start: only this stage's layer slice is read back —
         # charge_weight_load bills ModelStageWorker.weight_bytes, never the
         # full model (and syncs both ledger timelines: nothing overlaps a
@@ -323,10 +332,10 @@ def run_lm_pipeline(
         w.touch_memory(executors[m].weight_bytes)
         workers.append(w)
 
-    # ---------------- fabric ------------------------------------------------
-    if fabric is None:
-        if channel == "queue":
-            fabric = QueueFabric(
+    # ---------------- fabric(s) ----------------------------------------------
+    def _mk_fabric(ch: str):
+        if ch == "queue":
+            return QueueFabric(
                 P, pricing=pricing,
                 publish_latency=latency.sns_publish_latency,
                 fanout_latency=latency.sns_fanout_latency,
@@ -334,16 +343,32 @@ def run_lm_pipeline(
                 long_poll_window=latency.sqs_long_poll_window,
                 seed=seed,
             )
-        elif channel == "object":
-            fabric = ObjectFabric(
-                P,
-                put_latency=latency.s3_put_latency,
-                get_first_byte=latency.s3_get_first_byte,
-                list_latency=latency.s3_list_latency,
-                bandwidth=latency.s3_bandwidth,
-            )
-        else:
-            raise ValueError(channel)
+        return ObjectFabric(
+            P,
+            put_latency=latency.s3_put_latency,
+            get_first_byte=latency.s3_get_first_byte,
+            list_latency=latency.s3_list_latency,
+            bandwidth=latency.s3_bandwidth,
+        )
+
+    if channel == "auto":
+        if fabric is not None:
+            raise ValueError("channel='auto' is incompatible with an "
+                             "injected fabric")
+        boundary_ch, loop_ch = _lm_autotune_plan(
+            B, S, cfg.d_model, P, max_new_tokens, pricing)
+        plan_str = "".join(c[0] for c in boundary_ch) + "+" + loop_ch[0]
+    elif channel in ("queue", "object"):
+        boundary_ch = [channel] * max(0, P - 1)
+        loop_ch = channel
+        plan_str = None
+    else:
+        raise ValueError(channel)
+    if fabric is not None:
+        fabrics = {channel: fabric}
+    else:
+        fabrics = {ch: _mk_fabric(ch)
+                   for ch in dict.fromkeys(list(boundary_ch) + [loop_ch])}
     hops = itertools.count()
 
     def f32_panel(x) -> np.ndarray:
@@ -367,8 +392,9 @@ def run_lm_pipeline(
         if m == 0:
             x_in = jnp.asarray(prompts, jnp.int32)
         else:
-            buf = _drain_activation(hop, m - 1, w, n_rows, width, channel,
-                                    fabric, compute)
+            ch = boundary_ch[m - 1]
+            buf = _drain_activation(hop, m - 1, w, n_rows, width, ch,
+                                    fabrics[ch], compute)
             x_in = jnp.asarray(buf.reshape(B, -1, width)).astype(act_dtype)
         n_prefill_tokens = B * (x_in.shape[1] if m else S)
         out = ex.run_prefill(x_in, max_len, extra=extra if m == 0 else None)
@@ -378,7 +404,8 @@ def run_lm_pipeline(
             panel = f32_panel(out)
             n_rows, width = panel.shape
             hop = next(hops)
-            _send_activation(hop, panel, w, m + 1, channel, fabric, compute)
+            ch = boundary_ch[m]
+            _send_activation(hop, panel, w, m + 1, ch, fabrics[ch], compute)
 
     token = jnp.argmax(out[:, -1:], axis=-1).astype(jnp.int32)
 
@@ -393,18 +420,19 @@ def run_lm_pipeline(
             loop_hop = next(hops)
             _send_activation(
                 loop_hop, np.asarray(token, np.float32), workers[P - 1], 0,
-                channel, fabric, compute,
+                loop_ch, fabrics[loop_ch], compute,
             )
             buf = _drain_activation(loop_hop, P - 1, workers[0], B, 1,
-                                    channel, fabric, compute)
+                                    loop_ch, fabrics[loop_ch], compute)
             token = jnp.asarray(buf.astype(np.int32))
         for m in range(P):
             w, ex = workers[m], executors[m]
             if m == 0:
                 x_in = token
             else:
-                buf = _drain_activation(hop, m - 1, w, B, width, channel,
-                                        fabric, compute)
+                ch = boundary_ch[m - 1]
+                buf = _drain_activation(hop, m - 1, w, B, width, ch,
+                                        fabrics[ch], compute)
                 x_in = jnp.asarray(buf[:, None, :]).astype(act_dtype)
             out = ex.run_decode(x_in)
             charge_stage(m, B)
@@ -413,7 +441,8 @@ def run_lm_pipeline(
                 panel = f32_panel(out)
                 width = panel.shape[1]
                 hop = next(hops)
-                _send_activation(hop, panel, w, m + 1, channel, fabric,
+                ch = boundary_ch[m]
+                _send_activation(hop, panel, w, m + 1, ch, fabrics[ch],
                                  compute)
         logits = out
         token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
@@ -427,28 +456,37 @@ def run_lm_pipeline(
         P=P, mean_runtime_s=float((times - starts).mean()),
         memory_mb=memory_mb,
     )
-    if channel == "queue":
-        qm = fabric.metrics
+    raw, wire = 0, 0
+    extra_metrics: Dict[str, float] = {}
+    if "queue" in fabrics:
+        qm = fabrics["queue"].metrics
         stats.publish_units = qm.publish_billed_units
         stats.bytes_sns_to_sqs = qm.bytes_sns_to_sqs
         stats.sqs_api_calls = qm.sqs_api_calls
-        cost = queue_cost(stats, pricing)
-        raw, wire = qm.raw_bytes, qm.bytes_sns_to_sqs
-        extra_metrics = {
+        raw += qm.raw_bytes
+        wire += qm.bytes_sns_to_sqs
+        extra_metrics.update({
             "publish_api_calls": qm.publish_api_calls,
             "messages": qm.messages_delivered,
             "empty_polls": qm.empty_polls,
-        }
-    else:
-        om = fabric.metrics
+        })
+    if "object" in fabrics:
+        om = fabrics["object"].metrics
         stats.s3_puts = om.puts
         stats.s3_gets = om.gets
         stats.s3_lists = om.lists
-        cost = object_cost(stats, pricing)
-        raw, wire = om.raw_bytes, om.bytes_written
-        extra_metrics = {"nul_files": om.nul_files}
+        raw += om.raw_bytes
+        wire += om.bytes_written
+        extra_metrics["nul_files"] = om.nul_files
+    # communication sums both fabrics' tariffs (each is 0 for unused stats)
+    cost = CostBreakdown(
+        compute=lambda_cost(stats, pricing),
+        communication=(queue_cost(stats, pricing).communication
+                       + object_cost(stats, pricing).communication),
+    )
 
     act_bytes = B * cfg.d_model * 4
+    decode_ch = boundary_ch[0] if boundary_ch else loop_ch
     metrics = {
         "flops_total": float(sum(w.flops for w in workers)),
         "phased_makespan_s": float(phased_times.max()),
@@ -456,10 +494,12 @@ def run_lm_pipeline(
         "hops": float(next(hops)),
         # analytic per-hop $ (cost-model Eq. 5-7 on one decode activation) —
         # the stage planner's a-priori estimate alongside the billed truth
-        "est_decode_hop_usd": activation_hop_cost(channel, act_bytes,
+        "est_decode_hop_usd": activation_hop_cost(decode_ch, act_bytes,
                                                   pricing),
         **{k: float(v) for k, v in extra_metrics.items()},
     }
+    if plan_str is not None:
+        metrics["chosen_channel_plan"] = plan_str
     return LmPipelineResult(
         tokens=np.stack(out_tokens, axis=1).astype(np.int32),
         logits=np.asarray(logits[:, 0], np.float32),
@@ -467,3 +507,34 @@ def run_lm_pipeline(
         cost=cost, raw_exchange_bytes=int(raw), wire_exchange_bytes=int(wire),
         metrics=metrics,
     )
+
+
+def _lm_autotune_plan(
+    B: int, S: int, d_model: int, P: int, max_new_tokens: int,
+    pricing: PricingConstants,
+):
+    """Per-stage-boundary channel choice from the live cost model.
+
+    A boundary ships one [B·S, d] prefill panel plus ``max_new_tokens``
+    [B, d] decode panels per request; the planner sums
+    ``activation_hop_cost`` over those payloads (chunk header + row ids +
+    float32 values, the exact ``pack_rows`` framing) and picks the cheaper
+    channel per boundary — ties go to queue (lower latency per hop).  The
+    token loopback (head → embedding, [B, 1] per step) is chosen the same
+    way.  Deterministic in the request shape, so overlap/phased twins of a
+    run see one plan."""
+    def hop(ch: str, n_rows: int, width: int) -> float:
+        nbytes = 24 + n_rows * (4 + 4 * width)
+        return activation_hop_cost(ch, nbytes, pricing)
+
+    boundary: List[str] = []
+    for _ in range(max(0, P - 1)):
+        cost = {
+            ch: hop(ch, B * S, d_model) + max_new_tokens * hop(ch, B, d_model)
+            for ch in ("queue", "object")
+        }
+        boundary.append("queue" if cost["queue"] <= cost["object"]
+                        else "object")
+    lcost = {ch: max_new_tokens * hop(ch, B, 1) for ch in ("queue", "object")}
+    loop = "queue" if lcost["queue"] <= lcost["object"] else "object"
+    return boundary, loop

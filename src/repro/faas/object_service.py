@@ -45,6 +45,12 @@ class ObjectHandle:
     # timeline + PUT latency + streaming).  None when the writer carried no
     # ledger; drains then fall back to ``visible_at``.
     ledger_visible_at: Optional[float] = None
+    # Visibility under an *eager* reader: its LIST loop is already running
+    # when the PUT lands, so the object becomes actionable after the one-way
+    # PUT half-trip plus streaming — the PUT ack half overlaps the reader's
+    # in-flight LIST.  The reader still pays its own LIST + GET latencies on
+    # receive.  Ledger-only; billing and phased visibility never read this.
+    ledger_eager_visible_at: Optional[float] = None
 
 
 class ObjectFabric:
@@ -85,10 +91,14 @@ class ObjectFabric:
         done = at_time + self.put_latency + size / self.bandwidth
         led_done = (None if ledger_at is None
                     else ledger_at + self.put_latency + size / self.bandwidth)
+        led_eager = (None if ledger_at is None
+                     else ledger_at + self.put_latency / 2
+                     + size / self.bandwidth)
         ext = "nul" if is_nul else "dat"
         key = f"{src}_{target}.{ext}"
         handle = ObjectHandle(key=key, size=size, visible_at=done, is_nul=is_nul,
-                              src=src, ledger_visible_at=led_done)
+                              src=src, ledger_visible_at=led_done,
+                              ledger_eager_visible_at=led_eager)
         self._store.setdefault(self._prefix(layer, target), {})[key] = (
             handle,
             blob if blob is not None else Chunk(b"", 0),

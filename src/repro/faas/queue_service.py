@@ -44,6 +44,13 @@ class Delivery:
     # timeline + fan-out).  None when the sender carried no ledger; drains
     # then fall back to ``deliver_at``.
     ledger_at: Optional[float] = None
+    # Availability under an *eager* long-poll: the consumer's ReceiveMessage
+    # is already parked on the queue before the sender publishes, so the
+    # message reaches the reader after the one-way publish half-trip, the
+    # fan-out, and the push half of the poll RTT — the request half was
+    # spent while the sender was still packing.  Ledger-only; billing and
+    # the phased ``deliver_at`` schedule never read this.
+    ledger_eager_at: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -118,6 +125,13 @@ class QueueFabric:
         done = at_time + self.publish_latency
         led_avail = (None if ledger_at is None
                      else ledger_at + self.publish_latency + self.fanout_latency)
+        # Eager long-poll availability: the reader's poll is already open, so
+        # only the one-way publish half-trip (the ack half overlaps fan-out),
+        # the fan-out, and the push half of the poll RTT precede delivery.
+        # The sender's lane still occupies the full publish_latency.
+        led_eager = (None if ledger_at is None
+                     else ledger_at + self.publish_latency / 2
+                     + self.fanout_latency + self.poll_rtt / 2)
         for target, blob in entries:
             if not (0 <= target < self.n_workers):
                 raise ValueError(f"bad filter target {target}")
@@ -126,7 +140,7 @@ class QueueFabric:
                 # heap keyed by delivery time; receipt id breaks ties
                 _OrderedDelivery(
                     done + self.fanout_latency, self._next_receipt(), target,
-                    blob, ledger_at=led_avail,
+                    blob, ledger_at=led_avail, ledger_eager_at=led_eager,
                 ),
             )
         return done
@@ -177,6 +191,13 @@ class QueueFabric:
         while waiting).  Short polling: returns immediately, and each
         available message is missed with ``short_poll_miss_prob`` (not all
         SQS servers are visited).
+
+        Boundary semantics (pinned): a long poll waits over the half-open
+        window ``[now, now + long_poll_window)``.  A message whose
+        ``deliver_at`` lands exactly on the window deadline is NOT returned —
+        the empty response is already on the wire at that instant — so the
+        call bills one empty poll and the next call collects the message.
+        Every call counts exactly one of {delivered, empty}, never both.
         """
         self.metrics.sqs_api_calls += 1
         q = self._queues[worker]
@@ -190,12 +211,13 @@ class QueueFabric:
 
         if long_poll:
             got = available(now)
-            if not got and q:
-                wake = min(q[0].deliver_at, now + self.long_poll_window)
-                now = max(now, wake)
-                got = available(now)
-            elif not got:
-                now += self.long_poll_window
+            if not got:
+                deadline = now + self.long_poll_window
+                if q and q[0].deliver_at < deadline:
+                    now = max(now, q[0].deliver_at)
+                    got = available(now)
+                else:
+                    now = deadline
         else:
             got = []
             for d in available(now):
@@ -226,6 +248,8 @@ class _OrderedDelivery:
     target: int = dataclasses.field(compare=False)
     blob: Chunk = dataclasses.field(compare=False)
     ledger_at: Optional[float] = dataclasses.field(compare=False, default=None)
+    ledger_eager_at: Optional[float] = dataclasses.field(compare=False,
+                                                         default=None)
 
     def as_delivery(self) -> Delivery:
         return Delivery(
@@ -235,4 +259,5 @@ class _OrderedDelivery:
             attributes={},
             receipt=self.receipt,
             ledger_at=self.ledger_at,
+            ledger_eager_at=self.ledger_eager_at,
         )

@@ -19,6 +19,7 @@ paper cites.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, List, Literal, Optional, Union
 
 import numpy as np
@@ -28,9 +29,12 @@ from repro.core.cost_model import (
     CostBreakdown,
     PricingConstants,
     WorkloadStats,
+    activation_hop_cost,
+    lambda_cost,
     object_cost,
     queue_cost,
     serial_cost,
+    warm_pool_cost,
 )
 from repro.core.backends import ComputeBackend, get_backend
 from repro.core.fsi import (
@@ -51,14 +55,52 @@ from repro.core.partitioner import PartitionResult, partition_network
 from repro.core.send_recv import build_comm_plans
 from repro.data.graphchallenge import GraphChallengeNet
 from repro.faas.collectives import reduce_to_root
-from repro.faas.launch_tree import TreeSpec, launch_schedule
+from repro.faas.launch_tree import TreeSpec, launch_schedule, warm_pool_schedule
 from repro.faas.object_service import ObjectFabric
 from repro.faas.queue_service import QueueFabric
 from repro.faas.worker import ComputeModel, EventLedger, WorkerState
 
-__all__ = ["LatencyModel", "FsiRunResult", "run_fsi", "charge_weight_load"]
+__all__ = ["LatencyModel", "SimulatorConfig", "FsiRunResult", "run_fsi",
+           "charge_weight_load"]
 
-Channel = Literal["queue", "object", "serial"]
+Channel = Literal["queue", "object", "serial", "auto"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimulatorConfig:
+    """Run policy + seeded RNG threading for the deterministic simulator.
+
+    Every random draw a run makes — launch-tree cold-start jitter, straggler
+    assignment, short-poll visibility — flows from this one seed through
+    named, non-colliding streams, so two runs with an identical config
+    produce identical makespans, metrics, and bills on both clock models.
+    (Previously the straggler stream was derived as ``seed + 99``, which
+    collides with the *launch* stream of a run seeded ``seed + 99`` —
+    supposedly independent draws were correlated across runs.)
+
+    ``eager_poll`` — consumers park their long-poll / LIST loop for the next
+    layer before the publisher finishes, so the publish→poll RTT overlaps
+    the sender's pack+publish on the ledger timeline (billing unchanged).
+    ``warm_pool`` — workers are pre-invoked and weights pre-loaded before
+    the request arrives; the pre-request GB-seconds are billed explicitly on
+    the ``CostBreakdown.warm_pool`` line.
+    """
+
+    seed: int = 0
+    eager_poll: bool = True
+    warm_pool: bool = False
+
+    def launch_rng(self) -> np.random.Generator:
+        """Cold-start jitter stream — pinned to the historical root stream
+        (``default_rng(seed)``) so committed bench baselines stay
+        comparable across this refactor."""
+        return np.random.default_rng(self.seed)
+
+    def rng(self, stream: str) -> np.random.Generator:
+        """A named stream statistically independent of every other stream
+        and of any other seed's streams."""
+        return np.random.default_rng([self.seed,
+                                      zlib.crc32(stream.encode("utf-8"))])
 
 
 @dataclasses.dataclass
@@ -147,6 +189,9 @@ def run_fsi(
     mesh: Optional[object] = None,
     channel_batching: bool = True,
     overlap: bool = True,
+    eager_poll: bool = True,
+    warm_pool: bool = False,
+    sim: Optional[SimulatorConfig] = None,
 ) -> FsiRunResult:
     """Run distributed FSI over a simulated serverless fleet.
 
@@ -160,9 +205,25 @@ def run_fsi(
     from the ledger; ``overlap=False`` reports the phased clock and serves
     as the differential oracle — charge counts are bit-identical between the
     two by construction.  Both makespans are always exposed in ``metrics``.
+
+    ``eager_poll`` (default on) re-times ledger receives as if each consumer
+    had its next-layer long-poll / LIST already parked when the publish
+    landed — ledger-only, so no billable count moves.  ``warm_pool`` (default
+    off: it adds a cost line) pre-invokes the fleet and pre-loads weights
+    before the request epoch; the pre-request GB-seconds surface as
+    ``CostBreakdown.warm_pool`` / ``metrics["warm_pool_usd"]``.
+    ``channel="auto"`` picks queue vs object per layer boundary (and for the
+    output gather) from ``activation_hop_cost`` over the comm plan's payload
+    bytes; the plan string lands in ``metrics["chosen_channel_plan"]``.
+    ``sim`` bundles seed + policy; when given it overrides ``seed`` /
+    ``eager_poll`` / ``warm_pool``.
     """
     latency = latency or LatencyModel()
     compute = compute or ComputeModel()
+    if sim is None:
+        sim = SimulatorConfig(seed=seed, eager_poll=eager_poll,
+                              warm_pool=warm_pool)
+    seed = sim.seed
     backend = get_backend(compute_backend)
     # Mesh threading for device-sharded fleet backends (pallas-bsr-sharded):
     # the mesh rides on the backend instance, so everything downstream —
@@ -217,43 +278,74 @@ def run_fsi(
             )
 
     # ---------------- launch tree -------------------------------------------
-    ready = launch_schedule(
-        P, branching=branching, invoke_latency=latency.invoke_latency,
-        cold_start=latency.cold_start, cold_start_jitter=latency.cold_start_jitter,
-        seed=seed,
-    )
-    rng = np.random.default_rng(seed + 99)
+    provision_s: Optional[np.ndarray] = None
+    if sim.warm_pool:
+        # the same cascade + weight loads run before the request epoch; the
+        # per-worker pre-request runtime is billed on its own cost line
+        weight_load_s = np.array([
+            (getattr(artifacts[m], "weight_bytes", None)
+             or artifacts[m].weight_nnz * 8) / latency.weight_load_bandwidth
+            for m in range(P)
+        ])
+        ready, provision_s = warm_pool_schedule(
+            P, branching=branching, invoke_latency=latency.invoke_latency,
+            cold_start=latency.cold_start,
+            cold_start_jitter=latency.cold_start_jitter,
+            rng=sim.launch_rng(), weight_load_s=weight_load_s,
+        )
+    else:
+        ready = launch_schedule(
+            P, branching=branching, invoke_latency=latency.invoke_latency,
+            cold_start=latency.cold_start,
+            cold_start_jitter=latency.cold_start_jitter,
+            rng=sim.launch_rng(),
+        )
+    rng = sim.rng("straggler")
     workers: List[WorkerState] = []
     for m in range(P):
         w = WorkerState(rank=m, memory_mb=memory_mb, start_time=float(ready[m]),
                         ledger=EventLedger(t_compute=float(ready[m]),
-                                           t_channel=float(ready[m])))
+                                           t_channel=float(ready[m]),
+                                           eager_poll=sim.eager_poll))
         if latency.straggler_prob > 0 and rng.random() < latency.straggler_prob:
             w.slowdown = latency.straggler_slowdown
-        # weight shard load from object storage (paper: workers reload per request)
-        charge_weight_load(w, artifacts[m], latency)
+        if not sim.warm_pool:
+            # weight shard load from object storage (paper: workers reload
+            # per request); warm pools pre-loaded during provisioning
+            charge_weight_load(w, artifacts[m], latency)
         workers.append(w)
 
-    # ---------------- fabric -------------------------------------------------
-    if channel == "queue":
-        fabric = QueueFabric(
-            P, pricing=pricing,
-            publish_latency=latency.sns_publish_latency,
-            fanout_latency=latency.sns_fanout_latency,
-            poll_rtt=latency.sqs_poll_rtt,
-            long_poll_window=latency.sqs_long_poll_window,
-            seed=seed,
-        )
-    elif channel == "object":
-        fabric = ObjectFabric(
+    # ---------------- fabric(s) ----------------------------------------------
+    def _mk_fabric(ch: str):
+        if ch == "queue":
+            return QueueFabric(
+                P, pricing=pricing,
+                publish_latency=latency.sns_publish_latency,
+                fanout_latency=latency.sns_fanout_latency,
+                poll_rtt=latency.sqs_poll_rtt,
+                long_poll_window=latency.sqs_long_poll_window,
+                seed=seed,
+            )
+        return ObjectFabric(
             P,
             put_latency=latency.s3_put_latency,
             get_first_byte=latency.s3_get_first_byte,
             list_latency=latency.s3_list_latency,
             bandwidth=latency.s3_bandwidth,
         )
+
+    if channel == "auto":
+        plan_channels, gather_ch = _autotune_plan(
+            artifacts, batch, net.n_layers, P, branching, pricing)
+        plan_str = "".join(c[0] for c in plan_channels) + "+" + gather_ch[0]
+    elif channel in ("queue", "object"):
+        plan_channels = [channel] * net.n_layers
+        gather_ch = channel
+        plan_str = None
     else:
         raise ValueError(channel)
+    fabrics = {ch: _mk_fabric(ch)
+               for ch in dict.fromkeys(list(plan_channels) + [gather_ch])}
 
     # ---------------- layer loop --------------------------------------------
     x_panels: List[np.ndarray] = [
@@ -262,6 +354,8 @@ def run_fsi(
     for k in range(net.n_layers):
         t_before = [w.clock for w in workers]
         arts_k = [artifacts[m].layers[k] for m in range(P)]
+        ch_k = plan_channels[k]
+        fabric = fabrics[ch_k]
         # Phases 1+2 — publish + overlapped local MVP, then drain the channel.
         # ``channel_batching`` (the default) runs the fleet-batched host path:
         # one pack pass and one vectorized drain scatter per layer instead of
@@ -270,7 +364,7 @@ def run_fsi(
         # in tests/test_fleet_channels.py).
         bufs: List[np.ndarray]
         if channel_batching:
-            if channel == "queue":
+            if ch_k == "queue":
                 fleet_bufs = fsi_queue_send_and_local_fleet(
                     arts_k, x_panels, workers, fabric, compute,
                     exploit_sparsity=exploit_sparsity,
@@ -288,7 +382,7 @@ def run_fsi(
             bufs = []
             for m in range(P):
                 art = arts_k[m]
-                if channel == "queue":
+                if ch_k == "queue":
                     bufs.append(fsi_queue_send_and_local(
                         art, x_panels[m], workers[m], fabric, compute,
                         exploit_sparsity=exploit_sparsity,
@@ -300,7 +394,7 @@ def run_fsi(
                     ))
             for m in range(P):
                 art = arts_k[m]
-                if channel == "queue":
+                if ch_k == "queue":
                     bufs[m] = fsi_queue_recv(art, bufs[m], workers[m], fabric, compute)
                 else:
                     bufs[m] = fsi_object_recv(art, bufs[m], workers[m], fabric, compute)
@@ -341,8 +435,8 @@ def run_fsi(
     # from both clock models and from the bill.
     tree = TreeSpec(n_workers=P, branching=branching)
     panels = [x_panels[m] for m in range(P)]
-    gathered = reduce_to_root(workers, fabric, tree, panels, op="concat_rows",
-                              sync=True)
+    gathered = reduce_to_root(workers, fabrics[gather_ch], tree, panels,
+                              op="concat_rows", sync=True)
     order = np.argsort(np.concatenate([artifacts[m].layers[-1].out_rows for m in range(P)]))
     output = gathered[order]
 
@@ -355,26 +449,36 @@ def run_fsi(
         P=P, mean_runtime_s=float((times - starts).mean()),
         memory_mb=memory_mb,
     )
-    if channel == "queue":
-        qm = fabric.metrics
+    raw, wire = 0, 0
+    extra: Dict[str, float] = {}
+    if "queue" in fabrics:
+        qm = fabrics["queue"].metrics
         stats.publish_units = qm.publish_billed_units
         stats.bytes_sns_to_sqs = qm.bytes_sns_to_sqs
         stats.sqs_api_calls = qm.sqs_api_calls
-        cost = queue_cost(stats, pricing)
-        raw, wire = qm.raw_bytes, qm.bytes_sns_to_sqs
-        extra = {
+        raw += qm.raw_bytes
+        wire += qm.bytes_sns_to_sqs
+        extra.update({
             "publish_api_calls": qm.publish_api_calls,
             "messages": qm.messages_delivered,
             "empty_polls": qm.empty_polls,
-        }
-    else:
-        om = fabric.metrics
+        })
+    if "object" in fabrics:
+        om = fabrics["object"].metrics
         stats.s3_puts = om.puts
         stats.s3_gets = om.gets
         stats.s3_lists = om.lists
-        cost = object_cost(stats, pricing)
-        raw, wire = om.raw_bytes, om.bytes_written
-        extra = {"nul_files": om.nul_files}
+        raw += om.raw_bytes
+        wire += om.bytes_written
+        extra["nul_files"] = om.nul_files
+    # communication sums both fabrics' tariffs (each is 0 for unused stats)
+    cost = CostBreakdown(
+        compute=lambda_cost(stats, pricing),
+        communication=(queue_cost(stats, pricing).communication
+                       + object_cost(stats, pricing).communication),
+    )
+    if provision_s is not None:
+        cost.warm_pool = warm_pool_cost(provision_s, memory_mb, pricing)
 
     metrics = {
         "flops_total": float(sum(w.flops for w in workers)),
@@ -385,12 +489,54 @@ def run_fsi(
         "overlap_makespan_s": float(ledger_times.max()),
         **{k: float(v) for k, v in extra.items()},
     }
+    if plan_str is not None:
+        metrics["chosen_channel_plan"] = plan_str
+    if provision_s is not None:
+        metrics["warm_pool_usd"] = cost.warm_pool
+        metrics["warm_pool_provision_s"] = float(np.sum(provision_s))
     return FsiRunResult(
         output=output, channel=channel, P=P, worker_times=times, stats=stats,
         cost=cost, partition=partition,
         raw_exchange_bytes=int(raw), wire_exchange_bytes=int(wire),
         metrics=metrics,
     )
+
+
+def _autotune_plan(
+    artifacts: List[WorkerArtifacts], batch: int, n_layers: int, P: int,
+    branching: int, pricing: PricingConstants,
+):
+    """Per-layer-boundary channel choice from the live cost model.
+
+    For every layer the planner sums ``activation_hop_cost`` over the comm
+    plan's (src → target) payloads — ``len(rows)`` activation rows of
+    ``batch`` float32 each plus the chunk header — and picks the cheaper
+    channel; ties go to queue (lower latency per hop).  The output gather is
+    chosen the same way over the reduce tree's subtree panel sizes (shipped
+    raw, so no compression discount).  Deterministic: the plan depends only
+    on the partition, so overlap/phased twins of a run see one plan.
+    """
+    plan: List[str] = []
+    for k in range(n_layers):
+        cost = {"queue": 0.0, "object": 0.0}
+        for m in range(P):
+            for rows in artifacts[m].layers[k].send_global.values():
+                nbytes = 24 + len(rows) * (4 + 4 * batch)
+                for ch in cost:
+                    cost[ch] += activation_hop_cost(ch, nbytes, pricing)
+        plan.append("queue" if cost["queue"] <= cost["object"] else "object")
+    tree = TreeSpec(n_workers=P, branching=branching)
+    sub = [len(a.layers[-1].out_rows) for a in artifacts]
+    for m in reversed(range(1, P)):
+        sub[tree.parent(m)] += sub[m]
+    gcost = {"queue": 0.0, "object": 0.0}
+    for m in range(1, P):
+        nbytes = sub[m] * batch * 4
+        for ch in gcost:
+            gcost[ch] += activation_hop_cost(ch, nbytes, pricing,
+                                             est_compression_ratio=1.0)
+    gather = "queue" if gcost["queue"] <= gcost["object"] else "object"
+    return plan, gather
 
 
 def _default_memory_mb(neurons: int) -> int:

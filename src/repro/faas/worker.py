@@ -40,11 +40,27 @@ class EventLedger:
 
     t_compute: float = 0.0
     t_channel: float = 0.0
+    # Eager polling: the receiver thread parks its long-poll / LIST loop for
+    # layer l+1 while the layer-l publisher is still packing, so a chunk's
+    # availability is its *eager* stamp (one-way publish half-trip + fan-out
+    # + push half of the poll RTT) instead of the blocked-reader stamp.
+    # Pure re-timing: the phased clock still drives every fabric call, so no
+    # billable count can move.
+    eager_poll: bool = False
 
     @property
     def done(self) -> float:
         """The worker is finished when both timelines drain."""
         return max(self.t_compute, self.t_channel)
+
+    def recv_available(self, lazy_at: float,
+                       eager_at: Optional[float]) -> float:
+        """Availability stamp a drain should gate ``receive`` on: the eager
+        stamp when this ledger polls eagerly and the sender recorded one,
+        else the blocked-reader stamp."""
+        if self.eager_poll and eager_at is not None:
+            return eager_at
+        return lazy_at
 
     def compute(self, seconds: float) -> None:
         self.t_compute += seconds

@@ -145,6 +145,64 @@ class TestValidator:
                             "per_token_ms": 0.02, "tokens_per_s": 50000.0})
         assert validate(ok2) == []
 
+    def test_eager_row_rules(self):
+        ok = json.loads(json.dumps(self.BASE))
+        ok["rows"].append({"name": "fsi_queue_eager_P8",
+                           "per_sample_ms": 45.2, "lazy_per_sample_ms": 46.3,
+                           "phased_per_sample_ms": 50.6,
+                           "counters_identical": True})
+        assert validate(ok) == []
+        bad = json.loads(json.dumps(self.BASE))
+        bad["rows"].append({"name": "fsi_queue_eager_P8",
+                            "per_sample_ms": 45.2,
+                            "counters_identical": True})
+        assert any("'lazy_per_sample_ms'" in p for p in validate(bad))
+        bad = json.loads(json.dumps(self.BASE))
+        bad["rows"].append({"name": "fsi_queue_eager_P8",
+                            "per_sample_ms": 45.2,
+                            "lazy_per_sample_ms": 46.3,
+                            "phased_per_sample_ms": 50.6})
+        assert any("counters_identical" in p for p in validate(bad))
+
+    def test_warm_pool_row_rules(self):
+        ok = json.loads(json.dumps(self.BASE))
+        ok["rows"].append({"name": "fsi_warm_P8", "per_sample_ms": 10.3,
+                           "warm_pool_usd": 0.00016,
+                           "counters_identical": True})
+        assert validate(ok) == []
+        bad = json.loads(json.dumps(self.BASE))
+        bad["rows"].append({"name": "fsi_warm_P8", "per_sample_ms": 10.3,
+                            "counters_identical": True})
+        assert any("warm_pool_usd" in p for p in validate(bad))
+        bad = json.loads(json.dumps(self.BASE))
+        bad["rows"].append({"name": "fsi_warm_P8", "per_sample_ms": 10.3,
+                            "warm_pool_usd": 0.00016})
+        assert any("counters_identical" in p for p in validate(bad))
+
+    def test_lm_autotune_row_rules(self):
+        lm = {"name": "lm_pipeline_auto_P2", "per_token_ms": 230.0,
+              "phased_per_token_ms": 240.0, "usd_per_1k_tokens": 0.01,
+              "counters_identical": True, "chosen_channel_plan": "q+q"}
+        ok = json.loads(json.dumps(self.BASE))
+        ok["rows"].append(dict(lm))
+        assert validate(ok) == []
+        bad = json.loads(json.dumps(self.BASE))
+        row = dict(lm)
+        del row["chosen_channel_plan"]
+        bad["rows"].append(row)
+        assert any("chosen_channel_plan" in p for p in validate(bad))
+        # the auto row still owes the standard lm_pipeline_* contract
+        bad = json.loads(json.dumps(self.BASE))
+        row = dict(lm)
+        del row["usd_per_1k_tokens"]
+        bad["rows"].append(row)
+        assert any("'usd_per_1k_tokens'" in p for p in validate(bad))
+        # note escape hatch (jax unavailable on the bench host)
+        ok = json.loads(json.dumps(self.BASE))
+        ok["rows"].append({"name": "lm_pipeline_auto_P2", "per_token_ms": "",
+                           "note": "jax not installed"})
+        assert validate(ok) == []
+
     def test_serving_cb_note_escape_hatch(self):
         ok = json.loads(json.dumps(self.BASE))
         ok["rows"].append({"name": "serving_cb_continuous_S2",
@@ -242,6 +300,33 @@ class TestBenchDelta:
         base, new = self._payloads(10.0, 11.5)
         assert compare(base, new, threshold=0.05) != []
         assert compare(base, new, rows=("fsi_queue_P8",), threshold=0.05) == []
+
+    def test_gated_row_going_dark_fails(self):
+        """Regression (PR 9): a numeric baseline whose fresh twin degraded
+        to a placeholder ("" + note) was silently skipped pre-fix —
+        indistinguishable from the row passing."""
+        from benchmarks.bench_delta import compare
+
+        base, new = self._payloads(10.0, 10.0)
+        new["rows"][0] = {"name": "fsi_serial", "per_sample_ms": "",
+                          "note": "jax not installed"}
+        problems = compare(base, new)
+        assert len(problems) == 1
+        assert "fsi_serial" in problems[0] and "went dark" in problems[0]
+        assert "jax not installed" in problems[0]
+
+    def test_placeholder_baseline_is_a_loud_skip(self):
+        """A placeholder *baseline* has no trend to gate against — not a
+        failure, but never a silent drop either: it lands in ``skipped``."""
+        from benchmarks.bench_delta import compare
+
+        base, new = self._payloads(10.0, 10.0)
+        base["rows"][0] = {"name": "fsi_serial", "per_sample_ms": "",
+                           "note": "jax not installed"}
+        skipped = []
+        assert compare(base, new, skipped=skipped) == []
+        assert len(skipped) == 1
+        assert "fsi_serial" in skipped[0] and "placeholder" in skipped[0]
 
     def test_committed_baseline_self_compares_clean(self):
         from benchmarks.bench_delta import compare

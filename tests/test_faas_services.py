@@ -13,10 +13,12 @@ from repro.faas.launch_tree import (
     launch_schedule,
     parent_of,
     two_level_launch_schedule,
+    warm_pool_schedule,
 )
 from repro.faas.object_service import ObjectFabric
 from repro.faas.payload import Chunk, decode_chunk, encode_chunk, pack_rows
 from repro.faas.queue_service import QueueFabric
+from repro.faas.simulator import LatencyModel, SimulatorConfig, run_fsi
 from repro.faas.worker import WorkerState
 
 
@@ -157,6 +159,56 @@ class TestQueueFabric:
         assert t >= 10.06 - 1e-9
         assert len(msgs) == 1
 
+    def test_long_poll_exact_deadline_message_not_returned(self):
+        """Boundary pin (regression): a message whose ``deliver_at`` lands
+        EXACTLY on the long-poll deadline is not returned — the window is
+        half-open ``[now, now + W)``, the empty response is already on the
+        wire at that instant.  The pre-fix ``<=`` boundary returned the
+        message and skipped the empty-poll charge, so billing under eager
+        polling could drift from the phased oracle by one empty poll."""
+        f = QueueFabric(2, publish_latency=0.0, fanout_latency=0.0,
+                        poll_rtt=0.0, long_poll_window=2.0)
+        f.publish_batch(0, [(1, Chunk(b"m", raw_bytes=1))], at_time=2.0)
+        t, msgs = f.poll(1, at_time=0.0, long_poll=True)
+        assert msgs == []                      # deadline == deliver_at: miss
+        assert t == 2.0
+        assert f.metrics.empty_polls == 1      # the empty window IS billed
+        t, msgs = f.poll(1, at_time=t, long_poll=True)
+        assert len(msgs) == 1                  # next call collects it
+        assert t == 2.0                        # already available: no wait
+        assert f.metrics.messages_delivered == 1
+
+    def test_long_poll_sub_deadline_delivers_without_empty_charge(self):
+        """Just inside the window the poll wakes at delivery: one delivered
+        call, zero empty polls."""
+        f = QueueFabric(2, publish_latency=0.0, fanout_latency=0.0,
+                        poll_rtt=0.0, long_poll_window=2.0)
+        f.publish_batch(0, [(1, Chunk(b"m", raw_bytes=1))],
+                        at_time=2.0 - 1e-9)
+        t, msgs = f.poll(1, at_time=0.0, long_poll=True)
+        assert len(msgs) == 1 and t == 2.0 - 1e-9
+        assert f.metrics.empty_polls == 0
+
+    def test_long_poll_each_call_exactly_one_outcome(self):
+        """Structural invariant: every long-poll call counts exactly one of
+        {delivered, empty}, never both, never neither — the accounting the
+        eager-polling ledger re-times and the phased oracle bills."""
+        f = QueueFabric(2, publish_latency=0.0, fanout_latency=0.0,
+                        poll_rtt=0.0, long_poll_window=2.0)
+        f.publish_batch(0, [(1, Chunk(b"a", raw_bytes=1))], at_time=1.0)
+        f.publish_batch(0, [(1, Chunk(b"b", raw_bytes=1))], at_time=7.5)
+        t, calls = 0.0, 0
+        while f.pending(1) and calls < 20:
+            d0, e0 = f.metrics.messages_delivered, f.metrics.empty_polls
+            t, msgs = f.poll(1, at_time=t, long_poll=True)
+            calls += 1
+            delivered = f.metrics.messages_delivered - d0
+            empty = f.metrics.empty_polls - e0
+            assert (delivered > 0) != (empty == 1)
+            assert delivered == len(msgs)
+        assert f.metrics.messages_delivered == 2
+        assert f.metrics.empty_polls > 0       # the 1.0→7.5 gap forced waits
+
     def test_short_poll_can_miss(self):
         f = QueueFabric(2, short_poll_miss_prob=1.0, seed=0)
         f.publish_batch(0, [(1, Chunk(b"m", raw_bytes=1))], at_time=0.0)
@@ -239,6 +291,75 @@ class TestLaunchTree:
         a = launch_schedule(42, seed=7, cold_start_jitter=0.2)
         b = launch_schedule(42, seed=7, cold_start_jitter=0.2)
         np.testing.assert_array_equal(a, b)
+
+    def test_warm_pool_ready_at_epoch_and_provision_covers_cascade(self):
+        """Warm-pool provisioning: every worker is hot at the request epoch
+        (ready == 0), and each worker's pre-request runtime spans from its
+        own invoke to the pool-hot instant — the slowest worker's cascade
+        ready time plus its weight load."""
+        cold = launch_schedule(8, seed=3, cold_start_jitter=0.1)
+        load = np.full(8, 0.25)
+        ready, provision = warm_pool_schedule(8, seed=3, cold_start_jitter=0.1,
+                                              weight_load_s=load)
+        np.testing.assert_array_equal(ready, np.zeros(8))
+        assert provision.shape == (8,)
+        assert np.all(provision > 0)
+        # worker 0 is invoked at t=0, so its provision time IS pool-hot —
+        # the max over the cold cascade's ready times plus the weight load
+        np.testing.assert_allclose(provision[0], cold.max() + 0.25)
+
+    def test_warm_pool_same_jitter_stream_as_launch(self):
+        """Same seed → the warm cascade replays the cold cascade's jitter
+        draws exactly: with no weight load, pool-hot equals the cold
+        cascade's makespan, and the root (invoked at t=0) bills all of it;
+        every later-invoked worker bills strictly less."""
+        cold = launch_schedule(16, seed=11, cold_start_jitter=0.3)
+        _, provision = warm_pool_schedule(16, seed=11, cold_start_jitter=0.3)
+        np.testing.assert_allclose(provision[0], cold.max())
+        assert np.all(provision[1:] < provision[0])
+
+
+class TestSimulatorConfigSeeding:
+    """Seeded-RNG threading (regression): every random draw flows from
+    ``SimulatorConfig`` through named, non-colliding streams."""
+
+    def test_straggler_stream_not_the_seed_plus_99_collision(self):
+        """Pre-fix, the straggler stream was ``default_rng(seed + 99)`` —
+        byte-identical to the LAUNCH stream of a run seeded ``seed + 99``,
+        so 'independent' draws were correlated across runs.  The named
+        stream must match neither the legacy derivation nor any launch
+        stream."""
+        draws = SimulatorConfig(seed=0).rng("straggler").random(16)
+        legacy = np.random.default_rng(0 + 99).random(16)
+        launch_of_99 = SimulatorConfig(seed=99).launch_rng().random(16)
+        assert not np.array_equal(draws, legacy)
+        assert not np.array_equal(draws, launch_of_99)
+
+    def test_named_streams_distinct_and_reproducible(self):
+        sim = SimulatorConfig(seed=4)
+        a = sim.rng("straggler").random(8)
+        b = sim.rng("straggler").random(8)
+        c = sim.rng("short_poll").random(8)
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(a, c)
+
+    def test_identical_runs_identical_makespans(self):
+        """Two runs with identical config — cold-start jitter AND straggler
+        draws live — must produce identical worker times, metrics, and
+        bills on both clock models."""
+        from repro.data.graphchallenge import make_inputs, make_sparse_dnn
+
+        net = make_sparse_dnn(256, n_layers=4, seed=0)
+        x0 = make_inputs(256, 8, seed=1)
+        lat = LatencyModel(straggler_prob=0.4, straggler_slowdown=3.0)
+        runs = [run_fsi(net, x0, P=4, channel="queue", memory_mb=4000,
+                        latency=lat, seed=5) for _ in range(2)]
+        np.testing.assert_array_equal(runs[0].worker_times,
+                                      runs[1].worker_times)
+        assert runs[0].metrics == runs[1].metrics
+        assert vars(runs[0].stats) == vars(runs[1].stats)
+        assert runs[0].cost.total == runs[1].cost.total
+        np.testing.assert_array_equal(runs[0].output, runs[1].output)
 
 
 class TestCollectives:

@@ -340,11 +340,13 @@ class TestChannelFailurePaths:
         artifacts = prepare_worker_artifacts(net.layers, partition, plans)
         return net, x0, artifacts, dense_inference(net, x0)
 
-    def _run(self, case, channel, fabric, drain="perworker", ledger=False):
+    def _run(self, case, channel, fabric, drain="perworker", ledger=False,
+             eager=False):
         net, x0, artifacts, _ = case
         compute = ComputeModel()
         workers = [WorkerState(rank=m, memory_mb=2000,
-                               ledger=EventLedger() if ledger else None)
+                               ledger=(EventLedger(eager_poll=eager)
+                                       if ledger else None))
                    for m in range(self.P)]
         self._last_workers = workers
         panels = [x0[artifacts[m].x0_rows].astype(np.float32)
@@ -484,6 +486,41 @@ class TestChannelFailurePaths:
         fabric = OBJECT_FAULTS[fault](self.P)
         out = self._run(case, "object", fabric, drain="fleet", ledger=True)
         np.testing.assert_allclose(out, case[3], rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("drain", ["perworker", "fleet"])
+    @pytest.mark.parametrize("fault", sorted(QUEUE_FAULTS))
+    def test_queue_faults_under_eager_polling(self, case, fault, drain):
+        """PR 9: eager polling re-times ledger receives against the faulty
+        fabrics' redelivered/reordered stamps.  Outputs must stay exact, and
+        every fabric counter must be bit-identical to the lazy-ledger run —
+        eager is a ledger-only re-timing even when deliveries misbehave."""
+        results = {}
+        for eager in (False, True):
+            fabric = QUEUE_FAULTS[fault](self.P, pricing=SMALL_PRICING)
+            out = self._run(case, "queue", fabric, drain=drain, ledger=True,
+                            eager=eager)
+            results[eager] = (out, dict(vars(fabric.metrics)),
+                              [w.ledger.done for w in self._last_workers])
+        np.testing.assert_allclose(results[True][0], case[3],
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(results[True][0], results[False][0])
+        assert results[True][1] == results[False][1]   # counters identical
+        # the eager reader can only see a chunk sooner, never later
+        for e, l in zip(results[True][2], results[False][2]):
+            assert e <= l + 1e-9
+
+    @pytest.mark.parametrize("fault", sorted(OBJECT_FAULTS))
+    def test_object_faults_under_eager_polling(self, case, fault):
+        results = {}
+        for eager in (False, True):
+            fabric = OBJECT_FAULTS[fault](self.P)
+            out = self._run(case, "object", fabric, drain="fleet",
+                            ledger=True, eager=eager)
+            results[eager] = (out, dict(vars(fabric.metrics)))
+        np.testing.assert_allclose(results[True][0], case[3],
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(results[True][0], results[False][0])
+        assert results[True][1] == results[False][1]   # counters identical
 
     def test_queue_fault_billing_unchanged_by_ledger(self, case):
         """Attaching ledgers must not change a single fabric counter — the
