@@ -9,6 +9,11 @@
 #                     decode over host-device meshes + the no-relayout jaxpr
 #                     gate).  Run one harness alone with
 #                       make test PYTEST_ARGS=tests/test_attention_backends.py
+#   make test-chaos   only the crash-fault recovery suite (seeded chaos
+#                     injection, visibility-timeout redelivery, re-invoke
+#                     recovery + billing): tests/test_chaos.py plus the
+#                     fabric-level visibility-timeout units in
+#                     tests/test_faas_services.py
 #   make test-mesh    only the forced-4-device subprocess sweeps (marked
 #                     `mesh`, deselected from tier-1 by pyproject addopts);
 #                     CI's host-mesh-4 matrix entry runs this explicitly
@@ -46,11 +51,15 @@ PAPER_SCALE ?=
 BENCH_FLAGS := $(if $(PAPER_SCALE),--paper-scale,)
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-mesh bench-quick bench bench-paper bench-delta \
+.PHONY: test test-chaos test-mesh bench-quick bench bench-paper bench-delta \
         schema-check docs-check lint
 
 test:
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
+
+test-chaos:
+	$(PY) -m pytest -x -q tests/test_chaos.py \
+		tests/test_faas_services.py::TestVisibilityTimeout $(PYTEST_ARGS)
 
 test-mesh:
 	$(PY) -m pytest -x -q -m mesh $(PYTEST_ARGS)

@@ -80,6 +80,9 @@ DEFAULT_ROWS = (
     "fsi_warm_P8",
     "lm_pipeline_auto_P2",
     "lm_pipeline_auto_P4",
+    "fsi_chaos_queue_P4",
+    "fsi_chaos_object_P4",
+    "fsi_recovery_overhead_P4",
 )
 
 TIMING_FIELDS = ("per_sample_ms", "per_token_ms", "us_per_call")

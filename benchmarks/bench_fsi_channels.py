@@ -56,6 +56,17 @@ And the per-layer-hop attack (PR 9):
 * ``lm_pipeline_auto_P{2,4}`` rows run the per-boundary channel autotuner
   (``channel="auto"``) and record the chosen plan string.
 
+And the crash-fault recovery path (PR 10):
+
+* ``fsi_chaos_{queue,object}_P4`` rows run ``run_fsi`` under a seeded
+  ``FaultPlan`` that kills one worker per phase: every run must recover to
+  the bitwise fault-free output (``output_equal``), with the re-invocations,
+  visibility-timeout redeliveries, and checkpoint traffic billed on the
+  ``recovery`` cost line;
+* ``fsi_recovery_overhead_P4`` arms a zero-fault plan and records the
+  checkpointing makespan overhead plus the ``counters_identical`` bit —
+  arming chaos must not move a single main-fabric charge count.
+
 And the sequence-sharded decode path (PR 4):
 
 * ``decode_sharded_*`` rows time one split-KV decode step — shard-local
@@ -237,6 +248,65 @@ def bench_eager_warm(net, x0, oracle, workers=(2, 4, 8)) -> List[dict]:
             and r_warm.metrics == r_warm_ph.metrics),
         cost_usd=r_warm.cost.total,
         comms_usd=r_warm.cost.communication,
+        wall_s=round(wall, 4), wall_ms=round(wall * 1e3, 2),
+    ))
+    return rows
+
+
+def bench_chaos(net, x0, oracle, P: int = 4) -> List[dict]:
+    """Crash-fault recovery under seeded chaos (PR 10).
+
+    ``fsi_chaos_{queue,object}_P4``: one worker killed at each crash phase
+    (send / compute / drain, spread across layers and workers) — the fleet
+    re-invokes, restores panels from durable checkpoints, redelivers or
+    re-GETs the lost inputs, and must land on the bitwise fault-free output
+    with the recovery spend on its own auditable cost line.
+    ``fsi_recovery_overhead_P4``: the price of *arming* a plan that never
+    fires — checkpoint serialization on the clock, checkpoint tariffs on the
+    recovery line, and zero drift in any main-fabric charge count."""
+    from repro.faas.chaos import FaultPlan
+
+    rows: List[dict] = []
+    batch = x0.shape[1]
+    count_stats = ("publish_units", "bytes_sns_to_sqs", "sqs_api_calls",
+                   "s3_puts", "s3_gets", "s3_lists")
+    kills = ((1, 0, "send"), (2, 1, "compute"), (0, 2, "drain"))
+    for ch in ("queue", "object"):
+        t0 = time.perf_counter()
+        base = run_fsi(net, x0, P=P, channel=ch, memory_mb=4000)
+        r = run_fsi(net, x0, P=P, channel=ch, memory_mb=4000,
+                    faults=FaultPlan(kills=kills))
+        wall = time.perf_counter() - t0
+        assert np.allclose(r.output, oracle, rtol=1e-4, atol=1e-4)
+        rows.append(dict(
+            name=f"fsi_chaos_{ch}_P{P}", P=P,
+            per_sample_ms=r.per_sample_ms(batch),
+            output_equal=bool(np.array_equal(r.output, base.output)),
+            n_reinvokes=r.metrics["n_reinvokes"],
+            redeliveries=float(r.metrics.get("redeliveries", 0.0)),
+            recovery_usd=r.cost.recovery,
+            cost_usd=r.cost.total,
+            comms_usd=r.cost.communication,
+            wall_s=round(wall, 4), wall_ms=round(wall * 1e3, 2),
+        ))
+    t0 = time.perf_counter()
+    base = run_fsi(net, x0, P=P, channel="queue", memory_mb=4000)
+    armed = run_fsi(net, x0, P=P, channel="queue", memory_mb=4000,
+                    faults=FaultPlan())
+    wall = time.perf_counter() - t0
+    rows.append(dict(
+        name=f"fsi_recovery_overhead_P{P}", P=P,
+        per_sample_ms=armed.per_sample_ms(batch),
+        overhead_pct=round(
+            (armed.makespan / base.makespan - 1.0) * 100.0, 4),
+        counters_identical=bool(
+            all(getattr(armed.stats, f) == getattr(base.stats, f)
+                for f in count_stats)
+            and np.array_equal(armed.output, base.output)),
+        checkpoint_puts=armed.metrics["checkpoint_puts"],
+        recovery_usd=armed.cost.recovery,
+        cost_usd=armed.cost.total,
+        comms_usd=armed.cost.communication,
         wall_s=round(wall, 4), wall_ms=round(wall * 1e3, 2),
     ))
     return rows
@@ -684,6 +754,7 @@ def run(neurons=512, layers=24, batch=64, workers=(2, 4, 8, 16),
     rows.extend(bench_overlap(net, x0, oracle))
     rows.extend(bench_eager_warm(net, x0, oracle,
                                  workers=tuple(p for p in workers if p <= 8)))
+    rows.extend(bench_chaos(net, x0, oracle))
     rows.extend(bench_lm_pipeline())
     rows.extend(bench_lm_pipeline_auto())
     rows.extend(bench_serving_cb())

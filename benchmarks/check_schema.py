@@ -39,7 +39,13 @@ must fail CI instead of silently corrupting the trend.  Rules:
   ``counters_identical``;
 * ``lm_pipeline_auto_*`` rows (per-boundary channel autotune) must carry a
   non-empty string ``chosen_channel_plan`` on top of the standard
-  ``lm_pipeline_*`` contract.
+  ``lm_pipeline_*`` contract;
+* ``fsi_chaos_*`` rows (seeded crash-fault recovery, PR 10) must carry the
+  boolean ``output_equal`` acceptance bit (recovered output bitwise equal to
+  the fault-free run) plus numeric ``recovery_usd`` and ``n_reinvokes``;
+* ``fsi_recovery_overhead_*`` rows must carry numeric ``overhead_pct`` and
+  ``recovery_usd`` plus the ``counters_identical`` bit — arming a zero-fault
+  plan must not move a single main-fabric charge count.
 
 ``SCHEMA_VERSION`` stamps the artifact (written into ``meta`` by
 ``benchmarks.run --json``): bump it whenever a rule above changes shape, so
@@ -62,7 +68,10 @@ from typing import List
 # v4: fsi_*_eager_* / fsi_warm_* / lm_pipeline_auto_* rows — eager polling,
 #     warm-pool billing (warm_pool_usd) and channel autotune
 #     (chosen_channel_plan) gates (PR 9)
-SCHEMA_VERSION = 4
+# v5: fsi_chaos_* / fsi_recovery_overhead_* rows — crash-fault recovery
+#     (output_equal, recovery_usd) and zero-fault arming-overhead gates
+#     (PR 10)
+SCHEMA_VERSION = 5
 
 TIMING_FIELDS = ("us_per_call", "per_sample_ms", "per_token_ms")
 TIMED_PREFIXES = ("spmm_roofline_", "decode_attn_", "decode_sharded_",
@@ -148,6 +157,27 @@ def validate(payload) -> List[str]:
                 problems.append(
                     f"{where} ({name}): warm-pool row without boolean "
                     f"'counters_identical'")
+        if name.startswith("fsi_chaos_"):
+            if not isinstance(row.get("output_equal"), bool):
+                problems.append(
+                    f"{where} ({name}): chaos row without boolean "
+                    f"'output_equal'")
+            for f in ("recovery_usd", "n_reinvokes"):
+                v = row.get(f)
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    problems.append(
+                        f"{where} ({name}): chaos row without numeric {f!r}")
+        if name.startswith("fsi_recovery_overhead_"):
+            for f in ("overhead_pct", "recovery_usd"):
+                v = row.get(f)
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    problems.append(
+                        f"{where} ({name}): recovery-overhead row without "
+                        f"numeric {f!r}")
+            if not isinstance(row.get("counters_identical"), bool):
+                problems.append(
+                    f"{where} ({name}): recovery-overhead row without "
+                    f"boolean 'counters_identical'")
         if name.startswith("lm_pipeline_auto_") and not row.get("note"):
             v = row.get("chosen_channel_plan")
             if not isinstance(v, str) or not v:

@@ -93,16 +93,23 @@ class CostBreakdown:
     # each worker's invocation through pool-hot).  Zero for on-demand runs,
     # so the field is invisible to every existing cost comparison.
     warm_pool: float = 0.0
+    # Crash-recovery $ under an injected FaultPlan: re-invocation fees plus
+    # the durable checkpoint store's PUT/GET/LIST tariffs.  Redelivery and
+    # replay traffic on the main fabrics stays on ``communication`` (that is
+    # where the provider bills it); recovery *runtime* stays on ``compute``
+    # via mean_runtime.  Zero for fault-free runs.
+    recovery: float = 0.0
 
     @property
     def total(self) -> float:
-        return self.compute + self.communication + self.warm_pool
+        return self.compute + self.communication + self.warm_pool + self.recovery
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         warm = f", warm=${self.warm_pool:.4f}" if self.warm_pool else ""
+        rec = f", recovery=${self.recovery:.4f}" if self.recovery else ""
         return (
             f"CostBreakdown(comp=${self.compute:.4f}, "
-            f"comms=${self.communication:.4f}{warm}, total=${self.total:.4f})"
+            f"comms=${self.communication:.4f}{warm}{rec}, total=${self.total:.4f})"
         )
 
 

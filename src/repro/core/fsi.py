@@ -33,7 +33,7 @@ counts, and per-worker clock charges are bit-identical by construction
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Literal, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, List, Literal, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -515,11 +515,19 @@ def _queue_drain_one(
     fabric: QueueFabric,
     compute: ComputeModel,
     emit: Callable[[np.ndarray, np.ndarray], None],
+    *,
+    receipts_out: Optional[List[int]] = None,
 ) -> None:
     """Algorithm 1 lines 9-15 for one worker: long-poll until every source
     completes, handing each fresh chunk's (buffer positions, value view) to
     ``emit``.  The per-worker and fleet drains share this loop, so the
-    (src, seq) dedupe and stale-layer handling cannot diverge."""
+    (src, seq) dedupe and stale-layer handling cannot diverge.
+
+    ``receipts_out`` defers the receipt deletes: instead of a
+    DeleteMessageBatch per poll iteration, receipts are appended to the
+    given list and the caller commits (or abandons — the crash-injection
+    path) them after the drain.  This is how a ``drain``-phase crash leaves
+    its messages in flight to redeliver after the visibility timeout."""
     # Completion is per-source via the 'total byte strings' message attribute
     # (paper: "we cater for the case where source P_n needs to send multiple
     # messages ... using message attributes"), since activation sparsity
@@ -568,7 +576,9 @@ def _queue_drain_one(
             got_chunks[src] = got_chunks.get(src, 0) + 1
             if src in pending and got_chunks[src] >= total:
                 pending.discard(src)
-        if receipts:
+        if receipts_out is not None:
+            receipts_out.extend(receipts)
+        elif receipts:
             worker.advance_to_abs(fabric.delete_batch(worker.rank, receipts, worker.abs_time))
 
 
@@ -578,13 +588,16 @@ def fsi_queue_recv(
     worker: WorkerState,
     fabric: QueueFabric,
     compute: ComputeModel,
+    *,
+    receipts_out: Optional[List[int]] = None,
 ) -> np.ndarray:
     """Algorithm 1 lines 9-15 for one worker: long-poll until the buffer is
     complete (compute deferred — see ``finish_layer``)."""
     def emit(pos: np.ndarray, vals: np.ndarray) -> None:
         x_buf[pos] = vals            # the one copy of the zero-copy views
 
-    _queue_drain_one(art, worker, fabric, compute, emit)
+    _queue_drain_one(art, worker, fabric, compute, emit,
+                     receipts_out=receipts_out)
     return x_buf
 
 

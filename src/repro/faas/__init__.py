@@ -10,7 +10,8 @@ The simulator re-exports are lazy (PEP 562): ``repro.faas.simulator`` imports
 eager import here would make ``import repro.core.fsi`` circular.
 """
 
-_SIMULATOR_EXPORTS = ("LatencyModel", "run_fsi", "FsiRunResult")
+_SIMULATOR_EXPORTS = ("LatencyModel", "run_fsi", "FsiRunResult",
+                      "FaultPlan", "FleetFailure")
 
 __all__ = list(_SIMULATOR_EXPORTS)
 

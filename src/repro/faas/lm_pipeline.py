@@ -51,9 +51,10 @@ from repro.core.fsi import (
     _queue_publish_entries,
 )
 from repro.core.partitioner import StagePlan, plan_stages
+from repro.faas.chaos import FaultPlan
 from repro.faas.launch_tree import launch_schedule
 from repro.faas.object_service import ObjectFabric
-from repro.faas.payload import pack_rows
+from repro.faas.payload import Chunk, pack_rows
 from repro.faas.queue_service import QueueFabric
 from repro.faas.simulator import LatencyModel, charge_weight_load
 from repro.faas.worker import (
@@ -227,11 +228,14 @@ def _send_activation(
 def _drain_activation(
     hop: int, src_rank: int, dst: WorkerState, n_rows: int, width: int,
     channel: Channel, fabric, compute: ComputeModel,
+    receipts_out: Optional[List[int]] = None,
 ) -> np.ndarray:
     """Receive one [n_rows, width] activation panel from ``src_rank`` —
     through the exact FSI drain loops, so (src, seq) dedupe, stale-hop drop,
     receipt deletes, and ledger receive edges are shared with the FSI path
-    (and with its fault-fabric test matrix)."""
+    (and with its fault-fabric test matrix).  ``receipts_out`` defers the
+    queue receipt deletes exactly as in the FSI drain — the crash-injection
+    path abandons them so the hop redelivers after the visibility timeout."""
     buf = np.zeros((n_rows, width), dtype=np.float32)
     art = _HopArtifact(layer=hop, recv_expect={src_rank: 1},
                        needed_rows=np.arange(n_rows, dtype=np.int32))
@@ -240,7 +244,8 @@ def _drain_activation(
         buf[pos] = vals
 
     if channel == "queue":
-        _queue_drain_one(art, dst, fabric, compute, emit)
+        _queue_drain_one(art, dst, fabric, compute, emit,
+                         receipts_out=receipts_out)
     else:
         _object_drain_one(art, dst, fabric, compute, emit)
     return buf
@@ -271,6 +276,7 @@ def run_lm_pipeline(
     extra: Optional[Dict[str, np.ndarray]] = None,
     executors: Optional[List[ModelStageWorker]] = None,
     fabric=None,
+    faults: Optional[FaultPlan] = None,
 ) -> LmPipelineResult:
     """Serve ``max_new_tokens`` of greedy decode for ``prompts`` over a
     P-stage serverless pipeline on ``channel``.
@@ -286,6 +292,23 @@ def run_lm_pipeline(
     ``channel="auto"`` picks queue vs object per stage boundary (and for the
     token loopback) from ``activation_hop_cost`` over the boundary's actual
     activation bytes; the plan lands in ``metrics["chosen_channel_plan"]``.
+
+    ``faults`` arms a seeded :class:`~repro.faas.chaos.FaultPlan`.  Fabric
+    injections (API throttles, publish delays) apply to every hop; crash
+    sites are keyed ``(stage, hop, "drain")`` — the stage dies after
+    draining the hop but before its receipt deletes commit, so queue hops
+    redeliver after the visibility timeout and object hops re-GET from the
+    durable store.  Recovery re-invokes the stage (invoke + cold start +
+    stage weight reload), restores its KV cache from the last durable
+    checkpoint (a billed GET; numerically the host-resident cache is
+    trusted — the simulator runs stages in-process), and replays any hops
+    drained since that checkpoint (recoverable only on the object channel;
+    queue inputs were deleted at receipt commit).  KV checkpoints are PUT
+    after prefill and every ``checkpoint_every`` decode steps.  ``send`` /
+    ``compute`` crash sites and the runtime limit are exercised by
+    ``run_fsi``'s full phase matrix, not here.  With a zero-fault plan
+    armed, every billed count on the main fabrics stays bit-identical to
+    ``faults=None``.
     """
     import jax
     import jax.numpy as jnp
@@ -371,6 +394,103 @@ def run_lm_pipeline(
                    for ch in dict.fromkeys(list(boundary_ch) + [loop_ch])}
     hops = itertools.count()
 
+    # ---------------- chaos plumbing (faults=None: all of this is inert) ----
+    chaos = None
+    ckpt_fabric = None
+    if faults is not None:
+        chaos = faults.activate()
+        for fab in fabrics.values():
+            fab.chaos = chaos
+        ckpt_fabric = ObjectFabric(
+            P,
+            put_latency=latency.s3_put_latency,
+            get_first_byte=latency.s3_get_first_byte,
+            list_latency=latency.s3_list_latency,
+            bandwidth=latency.s3_bandwidth,
+        )
+    ckpt_ids = itertools.count()
+    last_ckpt: List[Optional[int]] = [None] * P
+    # hops drained since each stage's last KV checkpoint: (hop, src, ch,
+    # n_tokens) — the replay work a crash at that stage would redo
+    unreplayed: List[List[tuple]] = [[] for _ in range(P)]
+
+    def _checkpoint_kv(m: int) -> None:
+        """PUT stage m's resident KV cache to the durable checkpoint store.
+
+        The upload rides a background connection: the stage clock pays only
+        serialization; the PUT tariff lands on the recovery cost line."""
+        w = workers[m]
+        nbytes = int(sum(
+            leaf.nbytes for leaf in jax.tree.leaves(executors[m].cache)
+            if hasattr(leaf, "nbytes")
+        ))
+        s = nbytes / compute.pack_bandwidth * w.slowdown
+        w.charge_seconds(s)
+        if w.ledger is not None:
+            w.ledger.compute(s)
+        cid = next(ckpt_ids)
+        ckpt_fabric.put_obj(cid, m, m, Chunk(bytes(nbytes), raw_bytes=nbytes),
+                            w.abs_time)
+        last_ckpt[m] = cid
+        unreplayed[m].clear()
+
+    def _recover_stage(m: int, hop_id: int) -> None:
+        """Re-invoke crashed stage m: cold start + stage weight reload, KV
+        restore from the last durable checkpoint, replay of any hops drained
+        since it (object channel only — queue inputs are gone)."""
+        w = workers[m]
+        chaos.record_reinvoke(
+            m, hop_id, "drain",
+            "crashed after drain, before receipt delete; re-invoked")
+        w.charge_seconds(latency.invoke_latency + latency.cold_start)
+        if w.ledger is not None:
+            w.ledger.sync(latency.invoke_latency + latency.cold_start)
+        charge_weight_load(w, executors[m], latency)
+        if last_ckpt[m] is not None:
+            now, _ = ckpt_fabric.get_obj(last_ckpt[m], m, f"{m}_{m}.dat",
+                                         w.abs_time)
+            w.advance_to_abs(now)
+            if w.ledger is not None:
+                w.ledger.sync_to(w.abs_time)
+        for h, src_rank, hch, n_tokens in unreplayed[m]:
+            if hch != "object":
+                raise chaos.unrecoverable(
+                    m, hop_id,
+                    f"replaying hop {h} needs its activation re-read, but "
+                    f"the queue channel deleted it at receipt commit — "
+                    f"lower checkpoint_every so every drained hop is "
+                    f"covered by a KV checkpoint, or route boundaries over "
+                    f"the object channel")
+            now, _ = fabrics["object"].get_obj(h, m, f"{src_rank}_{m}.dat",
+                                               w.abs_time)
+            w.advance_to_abs(now)
+            if w.ledger is not None:
+                w.ledger.sync_to(w.abs_time)
+            w.charge_compute(executors[m].flops_per_token * n_tokens, compute)
+
+    def drain_hop(hop_id: int, src_rank: int, m: int, n_rows: int,
+                  width_: int, ch: str) -> np.ndarray:
+        """The fault-aware hop drain.  A doomed drain (armed crash site,
+        peeked without consuming) defers its queue receipt deletes and
+        abandons them, so the messages stay in flight and redeliver; then
+        the stage recovers and drains again."""
+        fab = fabrics[ch]
+        w = workers[m]
+        if chaos is not None and chaos.peek_crash(m, hop_id, "drain"):
+            _drain_activation(hop_id, src_rank, w, n_rows, width_, ch, fab,
+                              compute,
+                              receipts_out=[] if ch == "queue" else None)
+            chaos.should_crash(m, hop_id, "drain")  # consume the site
+            _recover_stage(m, hop_id)
+            buf = _drain_activation(hop_id, src_rank, w, n_rows, width_, ch,
+                                    fab, compute)
+        else:
+            buf = _drain_activation(hop_id, src_rank, w, n_rows, width_, ch,
+                                    fab, compute)
+        if chaos is not None:
+            unreplayed[m].append((hop_id, src_rank, ch, n_rows))
+        return buf
+
     def f32_panel(x) -> np.ndarray:
         a = np.asarray(x)
         return np.ascontiguousarray(
@@ -393,12 +513,13 @@ def run_lm_pipeline(
             x_in = jnp.asarray(prompts, jnp.int32)
         else:
             ch = boundary_ch[m - 1]
-            buf = _drain_activation(hop, m - 1, w, n_rows, width, ch,
-                                    fabrics[ch], compute)
+            buf = drain_hop(hop, m - 1, m, n_rows, width, ch)
             x_in = jnp.asarray(buf.reshape(B, -1, width)).astype(act_dtype)
         n_prefill_tokens = B * (x_in.shape[1] if m else S)
         out = ex.run_prefill(x_in, max_len, extra=extra if m == 0 else None)
         charge_stage(m, n_prefill_tokens)
+        if chaos is not None:
+            _checkpoint_kv(m)
         if m < P - 1:
             act_dtype = out.dtype
             panel = f32_panel(out)
@@ -422,8 +543,7 @@ def run_lm_pipeline(
                 loop_hop, np.asarray(token, np.float32), workers[P - 1], 0,
                 loop_ch, fabrics[loop_ch], compute,
             )
-            buf = _drain_activation(loop_hop, P - 1, workers[0], B, 1,
-                                    loop_ch, fabrics[loop_ch], compute)
+            buf = drain_hop(loop_hop, P - 1, 0, B, 1, loop_ch)
             token = jnp.asarray(buf.astype(np.int32))
         for m in range(P):
             w, ex = workers[m], executors[m]
@@ -431,11 +551,12 @@ def run_lm_pipeline(
                 x_in = token
             else:
                 ch = boundary_ch[m - 1]
-                buf = _drain_activation(hop, m - 1, w, B, width, ch,
-                                        fabrics[ch], compute)
+                buf = drain_hop(hop, m - 1, m, B, width, ch)
                 x_in = jnp.asarray(buf[:, None, :]).astype(act_dtype)
             out = ex.run_decode(x_in)
             charge_stage(m, B)
+            if chaos is not None and step % faults.checkpoint_every == 0:
+                _checkpoint_kv(m)
             if m < P - 1:
                 act_dtype = out.dtype
                 panel = f32_panel(out)
@@ -469,6 +590,7 @@ def run_lm_pipeline(
             "publish_api_calls": qm.publish_api_calls,
             "messages": qm.messages_delivered,
             "empty_polls": qm.empty_polls,
+            "redeliveries": qm.redeliveries,
         })
     if "object" in fabrics:
         om = fabrics["object"].metrics
@@ -484,6 +606,17 @@ def run_lm_pipeline(
         communication=(queue_cost(stats, pricing).communication
                        + object_cost(stats, pricing).communication),
     )
+    if chaos is not None:
+        # recovery line: re-invocation fees + durable KV-checkpoint store
+        # tariffs; redelivery/replay traffic stays on communication, and the
+        # recovery runtime is on compute via mean_runtime_s
+        cm = ckpt_fabric.metrics
+        ckpt_stats = WorkloadStats(P=P, mean_runtime_s=0.0,
+                                   memory_mb=memory_mb, s3_puts=cm.puts,
+                                   s3_gets=cm.gets, s3_lists=cm.lists)
+        cost.recovery = (sum(chaos.reinvokes.values())
+                         * pricing.lambda_invoke
+                         + object_cost(ckpt_stats, pricing).communication)
 
     act_bytes = B * cfg.d_model * 4
     decode_ch = boundary_ch[0] if boundary_ch else loop_ch
@@ -498,6 +631,16 @@ def run_lm_pipeline(
                                                   pricing),
         **{k: float(v) for k, v in extra_metrics.items()},
     }
+    if chaos is not None:
+        cm = ckpt_fabric.metrics
+        metrics.update({
+            "recovery_usd": cost.recovery,
+            "n_reinvokes": float(sum(chaos.reinvokes.values())),
+            "checkpoint_puts": float(cm.puts),
+            "checkpoint_bytes": float(cm.bytes_written),
+            "throttle_retries": float(sum(
+                fab.metrics.throttle_retries for fab in fabrics.values())),
+        })
     if plan_str is not None:
         metrics["chosen_channel_plan"] = plan_str
     return LmPipelineResult(

@@ -32,6 +32,7 @@ class ObjectMetrics:
     bytes_written: int = 0
     raw_bytes: int = 0
     nul_files: int = 0
+    throttle_retries: int = 0   # chaos-injected 503/429 retries
 
 
 @dataclasses.dataclass
@@ -72,6 +73,16 @@ class ObjectFabric:
         self.metrics = ObjectMetrics()
         # prefix "(bucket, layer, target)" → {key: (handle, blob)}
         self._store: Dict[Tuple[int, int, int], Dict[str, Tuple[ObjectHandle, Chunk]]] = {}
+        # Optional chaos hook (repro.faas.chaos.ChaosState); when set, PUT /
+        # GET / LIST consult it for throttles (SlowDown / 429).  None in
+        # production runs — zero overhead, zero billing drift.
+        self.chaos = None
+
+    def _maybe_throttle(self, stream: str, at_time: float) -> float:
+        if self.chaos is not None:
+            at_time, n = self.chaos.throttle(stream, at_time)
+            self.metrics.throttle_retries += n
+        return at_time
 
     def _prefix(self, layer: int, target: int) -> Tuple[int, int, int]:
         return (target % self.n_buckets, layer, target)
@@ -85,6 +96,7 @@ class ObjectFabric:
         ``ledger_at`` is the PUT start on the overlapped-pipeline timeline; it
         only stamps the handle's ``ledger_visible_at`` and never affects
         billing or the phased visibility schedule."""
+        at_time = self._maybe_throttle("s3_put", at_time)
         self.metrics.puts += 1
         is_nul = blob is None or len(blob) == 0
         size = 0 if is_nul else len(blob)
@@ -179,6 +191,7 @@ class ObjectFabric:
 
     def list_files(self, layer: int, worker: int, at_time: float) -> Tuple[float, List[ObjectHandle]]:
         """LIST the worker's own prefix; only handles already visible show up."""
+        at_time = self._maybe_throttle("s3_list", at_time)
         self.metrics.lists += 1
         now = at_time + self.list_latency
         entries = self._store.get(self._prefix(layer, worker), {})
@@ -186,6 +199,7 @@ class ObjectFabric:
         return now, sorted(visible, key=lambda h: h.key)
 
     def get_obj(self, layer: int, worker: int, key: str, at_time: float) -> Tuple[float, Chunk]:
+        at_time = self._maybe_throttle("s3_get", at_time)
         self.metrics.gets += 1
         handle, blob = self._store[self._prefix(layer, worker)][key]
         now = at_time + self.get_first_byte + handle.size / self.bandwidth

@@ -62,6 +62,8 @@ class QueueMetrics:
     messages_delivered: int = 0
     empty_polls: int = 0
     raw_bytes: int = 0                  # pre-compression volume (Table III)
+    redeliveries: int = 0               # visibility-timeout expiries requeued
+    throttle_retries: int = 0           # chaos-injected 429 retries
 
 
 class QueueFabric:
@@ -78,6 +80,7 @@ class QueueFabric:
         long_poll_window: float = 2.0,
         short_poll_miss_prob: float = 0.35,
         seed: int = 0,
+        visibility_timeout: float = 30.0,
     ):
         self.n_workers = n_workers
         self.n_topics = max(1, min(n_topics, n_workers))
@@ -87,10 +90,22 @@ class QueueFabric:
         self.poll_rtt = poll_rtt
         self.long_poll_window = long_poll_window
         self.short_poll_miss_prob = short_poll_miss_prob
+        self.visibility_timeout = visibility_timeout
         self.metrics = QueueMetrics()
         self._queues: List[List[Delivery]] = [[] for _ in range(n_workers)]
+        # At-least-once delivery: polled messages move here keyed by receipt
+        # until DeleteMessageBatch retires them; past ``visible_again_at`` an
+        # undeleted message is requeued (with a fresh receipt) and re-billed
+        # on the next poll that reaches it.
+        self._inflight: List[Dict[int, Tuple[float, "_OrderedDelivery"]]] = [
+            {} for _ in range(n_workers)
+        ]
         self._rng = np.random.default_rng(seed)
         self._receipt = 0
+        # Optional chaos hook (repro.faas.chaos.ChaosState); when set, publish
+        # and poll consult it for 429 throttles and SNS-internal redelivery
+        # delays.  None in production runs — zero overhead, zero billing drift.
+        self.chaos = None
 
     # -- producer side ------------------------------------------------------
 
@@ -116,6 +131,11 @@ class QueueFabric:
                 f"publish payload {payload}B exceeds "
                 f"{self.pricing.max_publish_payload}B cap"
             )
+        extra_fanout = 0.0
+        if self.chaos is not None:
+            at_time, n_retries = self.chaos.throttle("sns_publish", at_time)
+            self.metrics.throttle_retries += n_retries
+            extra_fanout = self.chaos.publish_delay()
         self.metrics.publish_api_calls += 1
         self.metrics.publish_billed_units += max(
             1, -(-payload // self.pricing.publish_billing_unit)
@@ -124,14 +144,15 @@ class QueueFabric:
         self.metrics.raw_bytes += sum(b.raw_bytes for _, b in entries)
         done = at_time + self.publish_latency
         led_avail = (None if ledger_at is None
-                     else ledger_at + self.publish_latency + self.fanout_latency)
+                     else ledger_at + self.publish_latency + self.fanout_latency
+                     + extra_fanout)
         # Eager long-poll availability: the reader's poll is already open, so
         # only the one-way publish half-trip (the ack half overlaps fan-out),
         # the fan-out, and the push half of the poll RTT precede delivery.
         # The sender's lane still occupies the full publish_latency.
         led_eager = (None if ledger_at is None
                      else ledger_at + self.publish_latency / 2
-                     + self.fanout_latency + self.poll_rtt / 2)
+                     + self.fanout_latency + extra_fanout + self.poll_rtt / 2)
         for target, blob in entries:
             if not (0 <= target < self.n_workers):
                 raise ValueError(f"bad filter target {target}")
@@ -139,7 +160,8 @@ class QueueFabric:
                 self._queues[target],
                 # heap keyed by delivery time; receipt id breaks ties
                 _OrderedDelivery(
-                    done + self.fanout_latency, self._next_receipt(), target,
+                    done + self.fanout_latency + extra_fanout,
+                    self._next_receipt(), target,
                     blob, ledger_at=led_avail, ledger_eager_at=led_eager,
                 ),
             )
@@ -198,10 +220,20 @@ class QueueFabric:
         the empty response is already on the wire at that instant — so the
         call bills one empty poll and the next call collects the message.
         Every call counts exactly one of {delivered, empty}, never both.
+
+        At-least-once semantics: returned messages are NOT removed — they
+        move to an in-flight set with a ``visibility_timeout`` deadline and
+        only ``delete_batch`` retires them.  An undeleted message reappears
+        (fresh receipt, re-billed on redelivery) once the deadline passes.
         """
+        if self.chaos is not None:
+            at_time, n_retries = self.chaos.throttle("sqs_receive", at_time)
+            self.metrics.throttle_retries += n_retries
         self.metrics.sqs_api_calls += 1
         q = self._queues[worker]
         now = at_time + self.poll_rtt
+        self._requeue_expired(worker, now)
+        inflight = self._inflight[worker]
 
         def available(t: float) -> List[_OrderedDelivery]:
             out = []
@@ -213,8 +245,15 @@ class QueueFabric:
             got = available(now)
             if not got:
                 deadline = now + self.long_poll_window
-                if q and q[0].deliver_at < deadline:
-                    now = max(now, q[0].deliver_at)
+                # The earliest thing that can show up inside the window is
+                # either a scheduled delivery or an in-flight message whose
+                # visibility deadline expires (a redelivery).
+                wake = q[0].deliver_at if q else float("inf")
+                if inflight:
+                    wake = min(wake, min(t for t, _ in inflight.values()))
+                if wake < deadline:
+                    now = max(now, wake)
+                    self._requeue_expired(worker, now)
                     got = available(now)
                 else:
                     now = deadline
@@ -227,14 +266,44 @@ class QueueFabric:
                     got.append(d)
         if got:
             self.metrics.messages_delivered += len(got)
+            for d in got:
+                inflight[d.receipt] = (now + self.visibility_timeout, d)
         else:
             self.metrics.empty_polls += 1
         return now, [d.as_delivery() for d in got]
 
+    def _requeue_expired(self, worker: int, t: float) -> None:
+        """Requeue in-flight messages whose visibility deadline has passed.
+
+        Redelivered messages get a fresh receipt (as SQS receipt handles do),
+        so a late delete of the old receipt is a harmless no-op; ledger
+        stamps are cleared so drains time the redelivery off ``deliver_at``.
+        """
+        inflight = self._inflight[worker]
+        expired = [r for r, (vis, _) in inflight.items() if vis <= t]
+        for r in expired:
+            vis, d = inflight.pop(r)
+            self.metrics.redeliveries += 1
+            heapq.heappush(
+                self._queues[worker],
+                _OrderedDelivery(vis, self._next_receipt(), d.target, d.blob),
+            )
+
     def delete_batch(self, worker: int, receipts: List[int], at_time: float) -> float:
-        """DeleteMessageBatch — one API call per ≤10 receipts."""
-        n_calls = max(1, -(-len(receipts) // 10))
+        """DeleteMessageBatch — one API call per ≤10 receipts.
+
+        An empty receipt list is a no-op: no API call is made (and none
+        billed), and no RTT is paid.  Unknown / already-requeued receipts
+        within a non-empty batch are ignored, matching SQS's per-entry
+        failure semantics.
+        """
+        if not receipts:
+            return at_time
+        n_calls = -(-len(receipts) // 10)
         self.metrics.sqs_api_calls += n_calls
+        inflight = self._inflight[worker]
+        for r in receipts:
+            inflight.pop(r, None)
         return at_time + self.poll_rtt
 
     def pending(self, worker: int) -> int:

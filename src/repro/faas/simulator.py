@@ -54,14 +54,16 @@ from repro.core.fsi import (
 from repro.core.partitioner import PartitionResult, partition_network
 from repro.core.send_recv import build_comm_plans
 from repro.data.graphchallenge import GraphChallengeNet
+from repro.faas.chaos import ChaosState, FaultPlan, FleetFailure
 from repro.faas.collectives import reduce_to_root
 from repro.faas.launch_tree import TreeSpec, launch_schedule, warm_pool_schedule
 from repro.faas.object_service import ObjectFabric
+from repro.faas.payload import Chunk
 from repro.faas.queue_service import QueueFabric
 from repro.faas.worker import ComputeModel, EventLedger, WorkerState
 
 __all__ = ["LatencyModel", "SimulatorConfig", "FsiRunResult", "run_fsi",
-           "charge_weight_load"]
+           "charge_weight_load", "FaultPlan", "FleetFailure"]
 
 Channel = Literal["queue", "object", "serial", "auto"]
 
@@ -192,6 +194,7 @@ def run_fsi(
     eager_poll: bool = True,
     warm_pool: bool = False,
     sim: Optional[SimulatorConfig] = None,
+    faults: Optional[FaultPlan] = None,
 ) -> FsiRunResult:
     """Run distributed FSI over a simulated serverless fleet.
 
@@ -217,6 +220,21 @@ def run_fsi(
     bytes; the plan string lands in ``metrics["chosen_channel_plan"]``.
     ``sim`` bundles seed + policy; when given it overrides ``seed`` /
     ``eager_poll`` / ``warm_pool``.
+
+    ``faults`` injects a seeded :class:`~repro.faas.chaos.FaultPlan`:
+    workers killed at chosen (layer, phase) sites are re-invoked (cold
+    start + weight reload — or a warm-pool spare — on real cost lines),
+    restore their input panel from a durable checkpoint written every
+    ``checkpoint_every`` layers, and replay the layer handler; undeleted
+    queue messages redeliver after the visibility timeout and durable
+    objects are re-GET.  The output stays bitwise equal to the fault-free
+    run while every recovery action bills (``CostBreakdown.recovery`` for
+    re-invocations + the checkpoint store; redelivery/replay traffic on
+    ``communication``; recovery runtime on ``compute``).  An unrecoverable
+    plan raises :class:`~repro.faas.chaos.FleetFailure` with per-worker
+    diagnostics.  With ``faults=None`` nothing changes — every billable
+    counter stays bit-identical to the fault-free baseline.  Fault
+    injection drives the per-worker host path (no fleet batching).
     """
     latency = latency or LatencyModel()
     compute = compute or ComputeModel()
@@ -347,6 +365,27 @@ def run_fsi(
     fabrics = {ch: _mk_fabric(ch)
                for ch in dict.fromkeys(list(plan_channels) + [gather_ch])}
 
+    # ---------------- chaos / recovery plumbing ------------------------------
+    chaos: Optional[ChaosState] = None
+    ckpt_fabric: Optional[ObjectFabric] = None
+    # warm-pool spares drawn on re-invoke (stragglers or crash recovery);
+    # their pre-provisioning seconds fold into the warm-pool cost line
+    spare_provision_s: List[float] = []
+    runtime_start = [w.clock for w in workers]
+    if faults is not None:
+        chaos = faults.activate()
+        for fab in fabrics.values():
+            fab.chaos = chaos
+        # The panel-checkpoint store: durable, on its own prefix space, and
+        # billed on the *recovery* cost line rather than communication.
+        ckpt_fabric = ObjectFabric(
+            P,
+            put_latency=latency.s3_put_latency,
+            get_first_byte=latency.s3_get_first_byte,
+            list_latency=latency.s3_list_latency,
+            bandwidth=latency.s3_bandwidth,
+        )
+
     # ---------------- layer loop --------------------------------------------
     x_panels: List[np.ndarray] = [
         x0[artifacts[m].x0_rows].astype(np.float32) for m in range(P)
@@ -356,6 +395,18 @@ def run_fsi(
         arts_k = [artifacts[m].layers[k] for m in range(P)]
         ch_k = plan_channels[k]
         fabric = fabrics[ch_k]
+        if chaos is not None:
+            # Crash-fault path: per-worker handlers with kill sites, panel
+            # checkpoints, and re-invoke recovery (see _chaos_run_layer).
+            x_panels = _chaos_run_layer(
+                k, net, artifacts, x_panels, workers, fabrics, plan_channels,
+                backend, compute, latency, chaos, ckpt_fabric, sim.warm_pool,
+                spare_provision_s, runtime_start, exploit_sparsity,
+            )
+            _check_stragglers(
+                reinvoke_stragglers, workers, t_before, straggler_timeout,
+                artifacts, latency, sim.warm_pool, spare_provision_s)
+            continue
         # Phases 1+2 — publish + overlapped local MVP, then drain the channel.
         # ``channel_batching`` (the default) runs the fleet-batched host path:
         # one pack pass and one vectorized drain scatter per layer instead of
@@ -414,19 +465,26 @@ def run_fsi(
         # Straggler slowdown applies to *active* work (compute, pack/unpack)
         # via WorkerState.slowdown at the charge sites — never to channel
         # waits, which would compound across the fleet.
-        if reinvoke_stragglers:
-            layer_cost = np.array([w.clock - t0 for w, t0 in zip(workers, t_before)])
-            med = float(np.median(layer_cost))
+        _check_stragglers(
+            reinvoke_stragglers, workers, t_before, straggler_timeout,
+            artifacts, latency, sim.warm_pool, spare_provision_s)
+
+    if chaos is not None:
+        # Mailbox sweep: a worker recovered at the *last* layer re-published
+        # duplicates its peers had already drained past — they must be
+        # polled and deleted (billed) before the queues host the reduce.
+        for fab in fabrics.values():
+            if not isinstance(fab, QueueFabric):
+                continue
             for m, w in enumerate(workers):
-                if med > 0 and layer_cost[m] > straggler_timeout * med and w.slowdown > 1:
-                    # re-invoke: fresh container (cold start + weight reload),
-                    # then it runs at full speed — the paper's cited
-                    # pre-emptive retry mitigation
-                    w.slowdown = 1.0
-                    w.charge_seconds(latency.cold_start)
-                    if w.ledger is not None:
-                        w.ledger.sync(latency.cold_start)
-                    charge_weight_load(w, artifacts[m], latency)
+                receipts: List[int] = []
+                while fab.pending(m):
+                    now, ds = fab.poll(m, w.abs_time)
+                    w.advance_to_abs(now)
+                    receipts.extend(d.receipt for d in ds)
+                if receipts:
+                    w.advance_to_abs(
+                        fab.delete_batch(m, receipts, w.abs_time))
 
     # ---------------- fused sync + reduce (Algorithm lines 19-20) ------------
     # FMI-style collective fusion: the output reduce's up-sweep payload
@@ -462,6 +520,7 @@ def run_fsi(
             "publish_api_calls": qm.publish_api_calls,
             "messages": qm.messages_delivered,
             "empty_polls": qm.empty_polls,
+            "redeliveries": qm.redeliveries,
         })
     if "object" in fabrics:
         om = fabrics["object"].metrics
@@ -478,7 +537,21 @@ def run_fsi(
                        + object_cost(stats, pricing).communication),
     )
     if provision_s is not None:
-        cost.warm_pool = warm_pool_cost(provision_s, memory_mb, pricing)
+        cost.warm_pool = warm_pool_cost(
+            list(provision_s) + spare_provision_s, memory_mb, pricing)
+    if chaos is not None:
+        # recovery line: re-invocation fees + the checkpoint store's request
+        # tariffs.  Redelivery / replay traffic on the main fabrics already
+        # landed on ``communication`` (where the provider bills it) and
+        # recovery runtime on ``compute`` via mean_runtime.
+        n_reinvokes = sum(chaos.reinvokes.values())
+        cm = ckpt_fabric.metrics
+        ckpt_stats = WorkloadStats(
+            P=P, mean_runtime_s=0.0, memory_mb=memory_mb,
+            s3_puts=cm.puts, s3_gets=cm.gets, s3_lists=cm.lists,
+        )
+        cost.recovery = (n_reinvokes * pricing.lambda_invoke
+                         + object_cost(ckpt_stats, pricing).communication)
 
     metrics = {
         "flops_total": float(sum(w.flops for w in workers)),
@@ -493,13 +566,280 @@ def run_fsi(
         metrics["chosen_channel_plan"] = plan_str
     if provision_s is not None:
         metrics["warm_pool_usd"] = cost.warm_pool
-        metrics["warm_pool_provision_s"] = float(np.sum(provision_s))
+        metrics["warm_pool_provision_s"] = float(
+            np.sum(provision_s) + sum(spare_provision_s))
+        metrics["warm_pool_spares"] = float(len(spare_provision_s))
+    if chaos is not None:
+        metrics["recovery_usd"] = cost.recovery
+        metrics["n_reinvokes"] = float(sum(chaos.reinvokes.values()))
+        metrics["checkpoint_puts"] = float(ckpt_fabric.metrics.puts)
+        metrics["checkpoint_bytes"] = float(ckpt_fabric.metrics.bytes_written)
+        metrics["throttle_retries"] = float(
+            sum(f.metrics.throttle_retries for f in fabrics.values()))
     return FsiRunResult(
         output=output, channel=channel, P=P, worker_times=times, stats=stats,
         cost=cost, partition=partition,
         raw_exchange_bytes=int(raw), wire_exchange_bytes=int(wire),
         metrics=metrics,
     )
+
+
+def _check_stragglers(
+    reinvoke_stragglers: bool,
+    workers: List[WorkerState],
+    t_before: List[float],
+    straggler_timeout: float,
+    artifacts: List[WorkerArtifacts],
+    latency: "LatencyModel",
+    warm_pool: bool,
+    spare_provision_s: List[float],
+) -> None:
+    """Pre-emptive straggler re-invocation after one layer (paper's cited
+    retry mitigation): workers whose layer cost exceeds ``straggler_timeout``
+    × the fleet median are replaced with a fresh container.
+
+    On demand that bills a cold start + weight reload on the worker clock;
+    under ``warm_pool=True`` the replacement is drawn from the
+    pre-provisioned pool instead — the spare already paid its cold start +
+    weight load *before* the request, so the clock pays only the invoke
+    routing and the spare's provisioning seconds fold into the
+    ``CostBreakdown.warm_pool`` line (via ``spare_provision_s``)."""
+    if not reinvoke_stragglers:
+        return
+    layer_cost = np.array([w.clock - t0 for w, t0 in zip(workers, t_before)])
+    med = float(np.median(layer_cost))
+    for m, w in enumerate(workers):
+        if med > 0 and layer_cost[m] > straggler_timeout * med and w.slowdown > 1:
+            w.slowdown = 1.0
+            if warm_pool:
+                w.charge_seconds(latency.invoke_latency)
+                if w.ledger is not None:
+                    w.ledger.sync(latency.invoke_latency)
+                nbytes = (getattr(artifacts[m], "weight_bytes", None)
+                          or artifacts[m].weight_nnz * 8)
+                spare_provision_s.append(
+                    latency.cold_start + nbytes / latency.weight_load_bandwidth)
+            else:
+                # re-invoke: fresh container (cold start + weight reload),
+                # then it runs at full speed
+                w.charge_seconds(latency.cold_start)
+                if w.ledger is not None:
+                    w.ledger.sync(latency.cold_start)
+                charge_weight_load(w, artifacts[m], latency)
+
+
+def _bill_reinvoke(
+    w: WorkerState,
+    artifact: WorkerArtifacts,
+    latency: "LatencyModel",
+    warm_pool: bool,
+    spare_provision_s: List[float],
+) -> None:
+    """Bill one crash-recovery re-invocation on the worker's clock models.
+
+    On demand: invoke routing + cold start + weight reload (a fleet-wide
+    stall on the ledger — nothing overlaps a dead worker).  Under a warm
+    pool the replacement container is already hot: the clock pays only the
+    invoke routing, and the spare's pre-request provisioning seconds land on
+    the warm-pool cost line."""
+    w.charge_seconds(latency.invoke_latency)
+    if w.ledger is not None:
+        w.ledger.sync(latency.invoke_latency)
+    if warm_pool:
+        nbytes = (getattr(artifact, "weight_bytes", None)
+                  or artifact.weight_nnz * 8)
+        spare_provision_s.append(
+            latency.cold_start + nbytes / latency.weight_load_bandwidth)
+    else:
+        w.charge_seconds(latency.cold_start)
+        if w.ledger is not None:
+            w.ledger.sync(latency.cold_start)
+        charge_weight_load(w, artifact, latency)
+
+
+def _checkpoint_panel(
+    ckpt_fabric: ObjectFabric,
+    k: int,
+    m: int,
+    panel: np.ndarray,
+    w: WorkerState,
+    compute: ComputeModel,
+) -> None:
+    """PUT worker ``m``'s layer-``k`` input panel to the durable checkpoint
+    store.  The upload rides a background connection (async PUT issued
+    alongside the layer's sends), so the worker clock pays only the panel
+    serialization; the store's request tariffs land on the *recovery* cost
+    line at billing time.  This is what keeps the zero-fault overhead of an
+    armed FaultPlan at ~0 on both clock models."""
+    blob = Chunk(panel.tobytes(), raw_bytes=panel.nbytes)
+    s = panel.nbytes / compute.pack_bandwidth * w.slowdown
+    w.charge_seconds(s)
+    if w.ledger is not None:
+        w.ledger.compute(s)
+    ckpt_fabric.put_obj(k, m, m, blob, w.abs_time)
+
+
+def _restore_panel(
+    m: int,
+    k: int,
+    batch: int,
+    chaos: ChaosState,
+    ckpt_fabric: ObjectFabric,
+    artifacts: List[WorkerArtifacts],
+    workers: List[WorkerState],
+    fabrics: Dict[str, object],
+    plan_channels: List[str],
+    backend: ComputeBackend,
+    compute: ComputeModel,
+    net: GraphChallengeNet,
+) -> np.ndarray:
+    """Reconstruct worker ``m``'s layer-``k`` input panel after a crash.
+
+    The re-invoked container GETs the newest checkpoint at or below ``k``
+    (real bytes round-trip — the restored panel is ``np.frombuffer`` of what
+    was PUT) and replays the intermediate layers forward.  Replay re-reads
+    each layer's remote inputs, which only works where they are still
+    readable: durable objects survive their drain, but queue messages were
+    deleted when the layer committed — a replayed *queue* layer is
+    unrecoverable and raises :class:`FleetFailure` (the checkpoint-cadence
+    trade-off: on the queue channel, C=1 is the only fully-recoverable
+    cadence).  Replayed layers do not re-publish — the restart driver hands
+    the worker its last acknowledged send layer, so only the crashed layer's
+    sends go out again."""
+    plan = chaos.plan
+    k0 = (k // plan.checkpoint_every) * plan.checkpoint_every
+    w = workers[m]
+    now, blob = ckpt_fabric.get_obj(k0, m, f"{m}_{m}.dat", w.abs_time)
+    w.advance_to_abs(now)
+    if w.ledger is not None:
+        w.ledger.sync_to(w.abs_time)
+    panel = np.frombuffer(bytes(blob), dtype=np.float32).reshape(-1, batch).copy()
+    for j in range(k0, k):
+        if plan_channels[j] != "object":
+            raise chaos.unrecoverable(
+                m, k,
+                f"replaying layer {j} needs its inputs re-read, but the queue "
+                f"channel deleted them at commit — lower checkpoint_every "
+                f"(C={plan.checkpoint_every}) so a checkpoint lands on layer {k}",
+            )
+        art = artifacts[m].layers[j]
+        buf = np.zeros((len(art.needed_rows), batch), dtype=np.float32)
+        buf[art.owned_positions] = panel[art.owned_source_positions]
+        w.charge_compute(art.local_flops * batch, compute)
+        buf = fsi_object_recv(art, buf, w, fabrics["object"], compute)
+        out = backend.apply(art.state_for(backend), buf, net.bias)
+        panel = charge_finish(art, buf, out, w, compute)
+    return panel
+
+
+def _chaos_run_layer(
+    k: int,
+    net: GraphChallengeNet,
+    artifacts: List[WorkerArtifacts],
+    x_panels: List[np.ndarray],
+    workers: List[WorkerState],
+    fabrics: Dict[str, object],
+    plan_channels: List[str],
+    backend: ComputeBackend,
+    compute: ComputeModel,
+    latency: "LatencyModel",
+    chaos: ChaosState,
+    ckpt_fabric: ObjectFabric,
+    warm_pool: bool,
+    spare_provision_s: List[float],
+    runtime_start: List[float],
+    exploit_sparsity: bool,
+) -> List[np.ndarray]:
+    """One layer of the crash-fault executor (per-worker host path).
+
+    Kill sites per :data:`~repro.faas.chaos.CRASH_PHASES`:
+
+    * ``send``    — dies before publishing; recovery re-invokes, restores the
+      panel, then publishes for the first time;
+    * ``compute`` — dies after publishing; the replayed handler publishes
+      duplicates, which peers retire via the (src, seq) dedupe;
+    * ``drain``   — dies after the drain but before the receipt deletes
+      commit; the in-flight messages redeliver after the visibility timeout
+      and the re-drain pays the empty polls + redelivery bills for real.
+
+    A ``runtime_limit_s`` overrun is detected at the layer boundary and
+    handled as a ``send``-phase kill.  Every recovery recomputes from real
+    restored bytes, so the layer's output panels are bitwise identical to
+    the fault-free run while every extra publish, poll, GET, and GB-second
+    is billed.
+    """
+    P = len(workers)
+    batch = x_panels[0].shape[1]
+    plan = chaos.plan
+    ch_k = plan_channels[k]
+    fabric = fabrics[ch_k]
+
+    if k % plan.checkpoint_every == 0:
+        for m in range(P):
+            _checkpoint_panel(ckpt_fabric, k, m, x_panels[m], workers[m],
+                              compute)
+
+    def send_local(m: int) -> np.ndarray:
+        art = artifacts[m].layers[k]
+        if ch_k == "queue":
+            return fsi_queue_send_and_local(
+                art, x_panels[m], workers[m], fabric, compute,
+                exploit_sparsity=exploit_sparsity)
+        return fsi_object_send_and_local(
+            art, x_panels[m], workers[m], fabric, compute,
+            exploit_sparsity=exploit_sparsity)
+
+    def recover(m: int, phase: str, reason: str) -> None:
+        chaos.record_reinvoke(m, k, phase, reason)
+        _bill_reinvoke(workers[m], artifacts[m], latency, warm_pool,
+                       spare_provision_s)
+        runtime_start[m] = workers[m].clock
+        x_panels[m] = _restore_panel(
+            m, k, batch, chaos, ckpt_fabric, artifacts, workers, fabrics,
+            plan_channels, backend, compute, net)
+
+    bufs: List[Optional[np.ndarray]] = [None] * P
+    for m in range(P):
+        if (plan.runtime_limit_s is not None
+                and workers[m].clock - runtime_start[m] > plan.runtime_limit_s):
+            recover(m, "send", "per-function runtime limit exceeded")
+        elif chaos.should_crash(m, k, "send"):
+            recover(m, "send", "killed before publish")
+        bufs[m] = send_local(m)
+        if chaos.should_crash(m, k, "compute"):
+            recover(m, "compute", "killed after publish, before drain")
+            bufs[m] = send_local(m)  # handler replay: duplicate publishes
+    for m in range(P):
+        art = artifacts[m].layers[k]
+
+        def drain(m: int, doomed: Optional[List[int]] = None) -> np.ndarray:
+            if ch_k == "queue":
+                return fsi_queue_recv(art, bufs[m], workers[m], fabric,
+                                      compute, receipts_out=doomed)
+            return fsi_object_recv(art, bufs[m], workers[m], fabric, compute)
+
+        if chaos.peek_crash(m, k, "drain"):
+            # A doomed drain defers its deletes: the receipts below are
+            # abandoned when the worker dies, stay in flight, and redeliver
+            # after the visibility timeout — which the re-drain pays for
+            # (empty polls while invisible, then re-billed deliveries).
+            bufs[m] = drain(m, doomed=[])
+            chaos.should_crash(m, k, "drain")  # consume the site
+            recover(m, "drain", "killed before the receipt deletes committed")
+            bufs[m] = send_local(m)  # handler replay: duplicate publishes
+            bufs[m] = drain(m)
+        else:
+            bufs[m] = drain(m)
+    outs = [
+        backend.apply(artifacts[m].layers[k].state_for(backend), bufs[m],
+                      net.bias)
+        for m in range(P)
+    ]
+    return [
+        charge_finish(artifacts[m].layers[k], bufs[m], outs[m], workers[m],
+                      compute)
+        for m in range(P)
+    ]
 
 
 def _autotune_plan(

@@ -218,6 +218,105 @@ class TestQueueFabric:
         assert len(msgs) == 1  # long poll visits all servers
 
 
+class TestVisibilityTimeout:
+    """At-least-once queue semantics (ISSUE 10): polled messages move to an
+    in-flight set and only ``delete_batch`` retires them; undeleted messages
+    redeliver — with a fresh receipt, re-billed — once the visibility
+    deadline passes."""
+
+    def _fab(self, **kw):
+        return QueueFabric(2, publish_latency=0.0, fanout_latency=0.0,
+                           poll_rtt=0.0, long_poll_window=2.0, **kw)
+
+    def test_polled_message_is_invisible_not_gone(self):
+        f = self._fab(visibility_timeout=5.0)
+        f.publish_batch(0, [(1, Chunk(b"m", raw_bytes=1))], at_time=0.0)
+        t, msgs = f.poll(1, 0.0, long_poll=True)
+        assert len(msgs) == 1
+        # invisible while in flight: the next window-long poll comes up empty
+        t2, msgs2 = f.poll(1, t, long_poll=True)
+        assert msgs2 == [] and t2 == t + 2.0
+        assert f.metrics.redeliveries == 0
+
+    def test_delete_actually_removes(self):
+        f = self._fab(visibility_timeout=1.0)
+        f.publish_batch(0, [(1, Chunk(b"m", raw_bytes=1))], at_time=0.0)
+        t, msgs = f.poll(1, 0.0, long_poll=True)
+        f.delete_batch(1, [msgs[0].receipt], t)
+        # well past the visibility deadline: nothing ever reappears
+        t2, msgs2 = f.poll(1, t + 10.0, long_poll=True)
+        assert msgs2 == []
+        assert f.metrics.redeliveries == 0
+        assert f.metrics.messages_delivered == 1
+
+    def test_undeleted_message_redelivers_with_fresh_receipt(self):
+        f = self._fab(visibility_timeout=5.0)
+        f.publish_batch(0, [(1, Chunk(b"m", raw_bytes=1))], at_time=0.0)
+        t, msgs = f.poll(1, 0.0, long_poll=True)
+        old_receipt = msgs[0].receipt
+        t2, msgs2 = f.poll(1, t + 5.0, long_poll=True)  # deadline passed
+        assert len(msgs2) == 1
+        assert bytes(msgs2[0].blob) == b"m"
+        assert msgs2[0].receipt != old_receipt          # SQS receipt handles
+        assert f.metrics.redeliveries == 1
+        assert f.metrics.messages_delivered == 2        # re-billed delivery
+        # deleting via the NEW receipt retires it for good
+        f.delete_batch(1, [msgs2[0].receipt], t2)
+        _, msgs3 = f.poll(1, t2 + 10.0, long_poll=True)
+        assert msgs3 == []
+
+    def test_long_poll_wakes_at_visibility_expiry(self):
+        """A parked long poll wakes the moment an in-flight deadline passes
+        (the redelivery is the earliest thing that can appear), not at the
+        window deadline."""
+        f = self._fab(visibility_timeout=1.0)
+        f.publish_batch(0, [(1, Chunk(b"m", raw_bytes=1))], at_time=0.0)
+        t, msgs = f.poll(1, 0.0, long_poll=True)
+        assert len(msgs) == 1
+        t2, msgs2 = f.poll(1, t, long_poll=True)
+        assert len(msgs2) == 1
+        assert t2 == pytest.approx(t + 1.0)   # expiry, not t + window
+        assert f.metrics.redeliveries == 1
+
+    def test_stale_receipt_delete_is_harmless(self):
+        """Deleting an already-requeued receipt is a per-entry no-op (SQS
+        semantics); the redelivered copy stays deliverable."""
+        f = self._fab(visibility_timeout=1.0)
+        f.publish_batch(0, [(1, Chunk(b"m", raw_bytes=1))], at_time=0.0)
+        t, msgs = f.poll(1, 0.0, long_poll=True)
+        old_receipt = msgs[0].receipt
+        t2, msgs2 = f.poll(1, t + 1.0, long_poll=True)  # redelivered
+        assert len(msgs2) == 1
+        f.delete_batch(1, [old_receipt], t2)            # stale: ignored
+        t3, msgs3 = f.poll(1, t2 + 1.0, long_poll=True)  # redelivers again
+        assert len(msgs3) == 1
+        assert f.metrics.redeliveries == 2
+
+    def test_empty_delete_batch_bills_nothing(self):
+        """Regression (ISSUE 10 satellite): an empty DeleteMessageBatch used
+        to bill one SQS API call; now it is a full no-op — no call, no RTT."""
+        f = QueueFabric(2, poll_rtt=0.008)
+        before = f.metrics.sqs_api_calls
+        out = f.delete_batch(1, [], at_time=3.25)
+        assert out == 3.25                    # no RTT paid
+        assert f.metrics.sqs_api_calls == before
+
+    def test_delete_batch_bills_per_ten_receipts(self):
+        f = self._fab()
+        f.publish_batch(0, [(1, Chunk(bytes([i]), raw_bytes=1))
+                            for i in range(10)], at_time=0.0)
+        f.publish_batch(0, [(1, Chunk(bytes([i]), raw_bytes=1))
+                            for i in range(2)], at_time=0.0)
+        t, receipts = 0.0, []
+        while f.pending(1):
+            t, msgs = f.poll(1, t, long_poll=True)
+            receipts.extend(m.receipt for m in msgs)
+        assert len(receipts) == 12
+        before = f.metrics.sqs_api_calls
+        f.delete_batch(1, receipts, t)
+        assert f.metrics.sqs_api_calls - before == 2  # ceil(12 / 10)
+
+
 class TestObjectFabric:
     def test_put_list_get_and_nul(self):
         f = ObjectFabric(4)
